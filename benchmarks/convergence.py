@@ -1,0 +1,57 @@
+"""Figure 1 analogue: per-class precision / recall / F vs iteration.
+
+The paper's Figure 1 shows, on a ~3:1 imbalanced binary task, both classes
+reaching a stable P/R/F plateau within ~2 full-batch iterations (iteration 1
+biased toward the majority class, iteration 2 the refinement). We reproduce
+the same curve shape on the synthetic Zipf corpus: majority class first,
+minority class catching up, both converging toward the Bayes ceiling of the
+generator. Reported: cate+1, cate-1 and avg for P, R, F per iteration —
+exactly the paper's panels.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import DPMRConfig
+from repro.core import sparse_lr
+from repro.data import sparse_corpus
+from repro.launch.mesh import make_host_mesh
+
+
+def run(iterations: int = 8, optimizer: str = "adagrad", lr: float = 2.0,
+        features: int = 1 << 14):
+    spec = sparse_corpus.CorpusSpec(num_features=features,
+                                    features_per_sample=32,
+                                    signal_features=512, seed=0)
+    cfg = DPMRConfig(num_features=features, max_features_per_sample=32,
+                     iterations=iterations, learning_rate=lr,
+                     max_hot=64, optimizer=optimizer)
+    mesh = make_host_mesh(1, 1)
+    train = lambda: sparse_corpus.batches(spec, 512, 8)
+    test = list(sparse_corpus.batches(spec, 512, 54, start=50))
+    hot = sparse_lr.hot_ids_from_corpus(cfg, train(), mesh)
+    history = []
+
+    def ev(state, fns):
+        return sparse_lr.evaluate(state, fns, test, mesh)
+
+    with jax.set_mesh(mesh):
+        out = sparse_lr.dpmr_train(cfg, mesh, train, 512, hot_ids=hot,
+                                   eval_fn=ev)
+    return out["history"]
+
+
+def main():
+    hist = run()
+    cols = ("precision_pos", "precision_neg", "precision_avg",
+            "recall_pos", "recall_neg", "recall_avg",
+            "f_pos", "f_neg", "f_avg")
+    print("iter,loss," + ",".join(cols))
+    for h in hist:
+        print(f"{h['iteration']},{h['loss']:.4f}," +
+              ",".join(f"{h[c]:.4f}" for c in cols))
+    return hist
+
+
+if __name__ == "__main__":
+    main()

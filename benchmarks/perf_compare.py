@@ -1,0 +1,60 @@
+"""Hillclimb bookkeeping: compare a variant probe against the baseline and
+emit the EXPERIMENTS.md §Perf row (hypothesis -> before -> after)."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+from benchmarks.roofline import (CHIPS, PEAK_FLOPS_BF16, extrapolate,
+                                 model_flops, roofline_terms)
+
+
+def load(arch: str, shape: str, tag: str = "", d="results/probes"):
+    suffix = f"probe_{tag}" if tag else "probe"
+    path = os.path.join(d, f"{arch}__{shape}__{suffix}.json")
+    probe = json.load(open(path))
+    assert probe.get("status") == "ok", (path, probe.get("status"))
+    step = extrapolate(probe)
+    terms = roofline_terms(step)
+    mf = model_flops(arch, shape, probe["kind"])
+    ideal = mf / CHIPS / PEAK_FLOPS_BF16
+    dom = max(terms["compute_s"], terms["memory_s"], terms["collective_s"])
+    return {**terms, "collective_bytes": step["collective_bytes"],
+            "flops_dev": step["flops"],
+            "roofline_fraction": ideal / dom if dom else 0.0}
+
+
+def compare(arch: str, shape: str, tags):
+    base = load(arch, shape)
+    print(f"== {arch} x {shape}")
+    hdr = (f"{'variant':<14s} {'compute_s':>10s} {'memory_s':>9s} "
+           f"{'collect_s':>10s} {'dominant':>10s} {'roofl%':>7s} "
+           f"{'dom delta':>10s}")
+    print(hdr)
+
+    def row(name, r, base_dom):
+        dom = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        delta = "" if base_dom is None else f"{(dom/base_dom-1)*100:+.1f}%"
+        print(f"{name:<14s} {r['compute_s']:>10.3f} {r['memory_s']:>9.3f} "
+              f"{r['collective_s']:>10.3f} {r['dominant']:>10s} "
+              f"{100*r['roofline_fraction']:>6.1f}% {delta:>10s}")
+        return dom
+
+    base_dom = row("baseline", base, None)
+    out = {"baseline": base}
+    for tag in tags:
+        try:
+            r = load(arch, shape, tag)
+            row(tag, r, base_dom)
+            out[tag] = r
+        except (FileNotFoundError, AssertionError) as e:
+            print(f"{tag:<14s} (missing: {e})")
+    return out
+
+
+if __name__ == "__main__":
+    compare("llama3-405b", "train_4k", ["cp", "cp_mb8"])
+    compare("phi3.5-moe-42b-a6.6b", "train_4k", ["cp", "cp_g256"])
+    compare("whisper-small", "train_4k", ["cp", "cp_mb4"])

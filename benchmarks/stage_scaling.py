@@ -1,0 +1,93 @@
+"""Table 1 analogue: per-STAGE cost vs shard count.
+
+The paper measures wall-minutes per map-reduce stage at (33,25)/(100,75)/
+(200,150) mappers,reducers and finds ~linear speedup. Wall time on a 1-core
+CPU host is meaningless, so we reproduce the scaling LAW the table
+demonstrates: per-device work (FLOPs) and per-device shuffle bytes of every
+DPMR stage, as a function of shard count P, derived from the per-stage
+buffer math (identical to what the engine executes). Linear speedup ==
+per-device cost ~ 1/P at fixed problem size, with the shuffle bytes bounded
+by capacity x P (constant) — which the table shows.
+
+Also validated numerically: the multi-device engine produces bit-identical
+parameters to the 1-device run (tests/test_multidevice.py), so the per-stage
+cost model is the only thing separating P=1 from P=256.
+"""
+from __future__ import annotations
+
+import json
+
+from repro.configs.base import DPMRConfig
+from repro.core import dpmr
+
+
+def stage_costs(cfg: DPMRConfig, global_batch: int, p: int,
+                cap_factor: float = 4.0) -> dict:
+    """Per-device per-iteration cost model for each DPMR stage."""
+    k = cfg.max_features_per_sample
+    b_loc = global_batch // p
+    n = b_loc * k                       # feature slots per device
+    f_loc = -(-cfg.num_features // p)
+    # capacity per (src,dst) pair
+    mean = max(1, n // p)
+    cap = min(n, max(16, -(-int(cap_factor * mean) // 8) * 8))
+
+    stages = {
+        # invertDocuments: sort-by-feature = O(n log n) compare ops, local
+        "invertDocuments": {"flops": n * max(n.bit_length(), 1),
+                            "shuffle_bytes": 0},
+        # distributeParameters: request ids + response values, both a2a
+        "distributeParameters": {"flops": n,
+                                 "shuffle_bytes": 2 * p * cap * 4},
+        # restoreDocuments: local unsort/gather
+        "restoreDocuments": {"flops": n, "shuffle_bytes": 0},
+        # computeGradients: fused sigmoid-grad (2nk mul-add) + combiner
+        "computeGradients": {"flops": 4 * n, "shuffle_bytes": p * cap * 4},
+        # updateParameters: owner-local SGD/adagrad update
+        "updateParameters": {"flops": 2 * f_loc, "shuffle_bytes": 0},
+        # hot psum: replicated head gradients, ring all-reduce
+        "hotSync": {"flops": cfg.max_hot,
+                    "shuffle_bytes": 2 * cfg.max_hot * 4},
+    }
+    total = {"flops": sum(s["flops"] for s in stages.values()),
+             "shuffle_bytes": sum(s["shuffle_bytes"]
+                                  for s in stages.values())}
+    return {"stages": stages, "total": total, "cap": cap, "b_loc": b_loc}
+
+
+def run(global_batch: int = 1 << 16, feature_space: int = 1 << 24):
+    cfg = DPMRConfig(num_features=feature_space, max_features_per_sample=64)
+    shard_counts = [32, 64, 128, 256, 512]
+    rows = []
+    base = None
+    for p in shard_counts:
+        c = stage_costs(cfg, global_batch, p)
+        t = c["total"]
+        if base is None:
+            base = t
+        rows.append({
+            "shards": p,
+            "flops_per_dev": t["flops"],
+            "shuffle_bytes_per_dev": t["shuffle_bytes"],
+            "speedup_vs_first": base["flops"] / t["flops"],
+            "stages": {k: v for k, v in c["stages"].items()},
+        })
+    return rows
+
+
+def main():
+    rows = run()
+    print(f"{'P':>5s} {'flops/dev':>12s} {'shuffle B/dev':>14s} "
+          f"{'speedup':>8s} {'linear?':>8s}")
+    p0 = rows[0]["shards"]
+    for r in rows:
+        ideal = r["shards"] / p0
+        print(f"{r['shards']:>5d} {r['flops_per_dev']:>12.3e} "
+              f"{r['shuffle_bytes_per_dev']:>14.3e} "
+              f"{r['speedup_vs_first']:>8.2f} "
+              f"{r['speedup_vs_first']/ideal:>7.0%}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

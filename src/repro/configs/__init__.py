@@ -1,0 +1,56 @@
+"""Arch-id -> config registry.
+
+Architecture ids use the assignment's spelling (dashes/dots); module names
+use underscores.
+"""
+from repro.configs.base import (
+    SHAPES,
+    DPMRConfig,
+    ModelConfig,
+    ParallelConfig,
+    ShapeConfig,
+    TrainConfig,
+)
+
+_ARCH_MODULES = {
+    "whisper-small": "whisper_small",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "phi3.5-moe-42b-a6.6b": "phi35_moe",
+    "granite-8b": "granite_8b",
+    "yi-6b": "yi_6b",
+    "llama3-405b": "llama3_405b",
+    "granite-34b": "granite_34b",
+    "zamba2-2.7b": "zamba2_2p7b",
+    "xlstm-125m": "xlstm_125m",
+    "chameleon-34b": "chameleon_34b",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    import importlib
+
+    if arch_id not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_ARCH_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch_id]}")
+    return mod.CONFIG
+
+
+def get_dpmr_config() -> DPMRConfig:
+    from repro.configs.dpmr_lr import CONFIG
+
+    return CONFIG
+
+
+__all__ = [
+    "ARCH_IDS",
+    "SHAPES",
+    "DPMRConfig",
+    "ModelConfig",
+    "ParallelConfig",
+    "ShapeConfig",
+    "TrainConfig",
+    "get_config",
+    "get_dpmr_config",
+]

@@ -1,0 +1,16 @@
+"""granite-34b [dense]: 88L d_model=6144 48H (MQA kv=1) d_ff=24576 vocab=49152.
+Llama-arch code model with multi-query attention.  [arXiv:2405.04324]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-34b",
+    family="dense",
+    num_layers=88,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=1,
+    d_ff=24576,
+    vocab_size=49152,
+    mlp_type="gelu",          # granite-34b is a GPT-BigCode-style 2-mat MLP
+)

@@ -1,0 +1,23 @@
+"""llama3-405b [dense]: 126L d_model=16384 128H (GQA kv=8) d_ff=53248
+vocab=128256.  [arXiv:2407.21783]
+
+405B params on a 256-chip v5e pod requires bf16 master params + bf16 Adam
+moments (8 bytes/param sharded 256-way ~ 12.7 GB/chip); production would use
+more chips or quantized moments — recorded in DESIGN.md.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-405b",
+    family="dense",
+    num_layers=126,
+    d_model=16384,
+    num_heads=128,
+    num_kv_heads=8,
+    d_ff=53248,
+    vocab_size=128256,
+    head_dim=128,
+    rope_theta=5e5,
+    param_dtype="bfloat16",
+    opt_dtype="bfloat16",
+)

@@ -1,0 +1,21 @@
+"""mixtral-8x22b [moe]: 56L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=32768,
+MoE 8 experts top-2, sliding-window attention.  [arXiv:2401.04088]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x22b",
+    family="moe",
+    num_layers=56,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=16384,
+    vocab_size=32768,
+    num_experts=8,
+    experts_per_token=2,
+    sliding_window=4096,
+    rope_theta=1e6,
+    param_dtype="bfloat16",   # 141B params: bf16 master + moments to fit 256 chips
+    opt_dtype="bfloat16",
+)

@@ -1,0 +1,41 @@
+"""Public API of the DPMR core."""
+from repro.core.dpmr import (
+    DPMRState,
+    capacity,
+    init_state,
+    make_step_fns,
+    num_shards,
+    optimize,
+    padded_features,
+)
+from repro.core.fsdp import dpmr_dense_linear, fsdp_specs
+from repro.core.hot_sharding import (
+    feature_counts,
+    load_imbalance,
+    select_hot,
+    split_hot,
+)
+from repro.core.sparse import (
+    Routing,
+    combine_grads,
+    owner_accumulate,
+    owner_apply,
+    route_build,
+    route_return,
+)
+from repro.core.sparse_lr import (
+    dpmr_classify,
+    dpmr_train,
+    dpmr_train_sgd,
+    evaluate,
+    hot_ids_from_corpus,
+)
+
+__all__ = [
+    "DPMRState", "Routing", "capacity", "combine_grads", "dpmr_classify",
+    "dpmr_dense_linear", "dpmr_train", "dpmr_train_sgd", "evaluate",
+    "feature_counts", "fsdp_specs", "hot_ids_from_corpus", "init_state",
+    "load_imbalance", "make_step_fns", "num_shards", "optimize",
+    "owner_accumulate", "owner_apply", "padded_features", "route_build",
+    "route_return", "select_hot", "split_hot",
+]

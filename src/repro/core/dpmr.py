@@ -1,0 +1,272 @@
+"""Distributed Parameter Map-Reduce — the paper's engine on TPU collectives.
+
+Algorithm 1/8 of the paper as a shard_map program over ALL mesh axes (every
+device is a DPMR node holding both a sample shard and a parameter shard,
+exactly the paper's HDFS co-location):
+
+  stage                 paper          here (per train step)
+  -----                 -----          ----
+  initParameters        Algorithm 2    init_state (zeros; hot stats external)
+  invertDocuments       Algorithm 3    sparse.route_build (sort-by-feature)
+  distributeParameters  Algorithm 4    all_to_all(requests) + owner lookup
+                                       + all_to_all(responses)
+  restoreDocuments      Algorithm 5    sparse.route_return (unsort)
+  computeGradients      Algorithm 6    kernels.ops.sigmoid_grad (map body)
+                                       + sparse.combine_grads (combiner)
+  (reduce shuffle)                     all_to_all(grad sums) + owner
+                                       scatter-add
+  updateParameters      Algorithm 7    sharded SGD on the owner shard
+  hot sharding          §4             hot set replicated, grads psum'd
+                                       (see core.hot_sharding)
+
+Two distribution strategies (cfg.distribution):
+  "a2a"       the DPMR shuffle: bytes/device ~ 3 * P * cap * 4 per step,
+              independent of feature-space size F.
+  "allgather" the parameter-server-free strawman (gather the whole table):
+              bytes/device ~ F * 4. Used as the comparison baseline in the
+              benchmarks — the paper's speedup claim is exactly that the
+              shuffle beats shipping the table.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import DPMRConfig
+from repro.core import hot_sharding, sparse
+from repro.kernels import ops
+
+
+class DPMRState(NamedTuple):
+    cold: jax.Array       # (F,) f32, sharded over all mesh axes
+    hot: jax.Array        # (max_hot,) f32, replicated (Zipf head)
+    hot_ids: jax.Array    # (max_hot,) int32 sorted, INT_MAX padded, replicated
+    cold_acc: jax.Array   # (F,) adagrad accumulator, sharded like cold
+    hot_acc: jax.Array    # (max_hot,) adagrad accumulator, replicated
+    step: jax.Array       # () int32
+
+
+def _axes(mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def num_shards(mesh) -> int:
+    n = 1
+    for a in mesh.axis_names:
+        n *= int(mesh.shape[a])
+    return n
+
+
+def padded_features(cfg: DPMRConfig, mesh) -> int:
+    p = num_shards(mesh)
+    return -(-cfg.num_features // p) * p
+
+
+def capacity(cfg: DPMRConfig, batch_local: int, mesh,
+             factor: float = 4.0) -> int:
+    """Per-(src,dst) a2a slots for cold features: factor x the uniform mean."""
+    p = num_shards(mesh)
+    n = batch_local * cfg.max_features_per_sample
+    mean = max(1, n // p)
+    return int(min(n, max(16, -(-int(factor * mean) // 8) * 8)))
+
+
+def init_state(cfg: DPMRConfig, mesh, hot_ids=None) -> DPMRState:
+    f = padded_features(cfg, mesh)
+    axes = _axes(mesh)
+    shard = NamedSharding(mesh, P(axes))
+    rep = NamedSharding(mesh, P())
+    cold = jax.device_put(jnp.zeros((f,), jnp.float32), shard)
+    cold_acc = jax.device_put(jnp.zeros((f,), jnp.float32), shard)
+    hot = jax.device_put(jnp.zeros((cfg.max_hot,), jnp.float32), rep)
+    hot_acc = jax.device_put(jnp.zeros((cfg.max_hot,), jnp.float32), rep)
+    if hot_ids is None:
+        hot_ids = jnp.full((cfg.max_hot,), hot_sharding.INT_MAX, jnp.int32)
+    hot_ids = jax.device_put(hot_ids.astype(jnp.int32), rep)
+    return DPMRState(cold, hot, hot_ids, cold_acc, hot_acc,
+                     jnp.zeros((), jnp.int32))
+
+
+def optimize(cfg: DPMRConfig, theta, acc, grad, lr):
+    """Algorithm 7 step 12: newPara = optimize(para, grad)."""
+    if cfg.optimizer == "adagrad":
+        acc = acc + grad * grad
+        step = grad * jax.lax.rsqrt(acc + cfg.adagrad_eps)
+        return theta - lr * step, acc
+    return theta - lr * grad, acc
+
+
+# ---------------------------------------------------------------------------
+# per-device stage pipeline
+# ---------------------------------------------------------------------------
+
+
+def _device_fwd(cfg, axes, p, block, cap, kernel_impl,
+                cold_loc, hot, hot_ids, ids, vals):
+    """Stages distribute+restore: returns (theta (B,K), routing, aux)."""
+    me = jax.lax.axis_index(axes)
+    base = me * block
+    flat = ids.reshape(-1)
+    hot_slot, is_hot, cold_ids = hot_sharding.split_hot(flat, hot_ids)
+
+    if cfg.distribution == "allgather":
+        table = jax.lax.all_gather(cold_loc, axes, tiled=True)       # (F,)
+        theta_cold = jnp.where(cold_ids >= 0,
+                               table[jnp.clip(cold_ids, 0)], 0.0)
+        routing = None
+        overflow = jnp.zeros((), jnp.int32)
+    else:
+        routing = sparse.route_build(cold_ids, p, block, cap)
+        req_recv = jax.lax.all_to_all(routing.req_ids, axes, 0, 0, tiled=True)
+        resp = sparse.owner_apply(req_recv, cold_loc, base)
+        resp_back = jax.lax.all_to_all(resp, axes, 0, 0, tiled=True)
+        theta_cold = sparse.route_return(routing, resp_back)
+        req_recv_saved = req_recv
+        overflow = routing.overflow
+
+    theta_hot = jnp.where(is_hot, hot[jnp.clip(hot_slot, 0)], 0.0)
+    theta = (theta_cold + theta_hot).reshape(ids.shape)
+    aux = {
+        "hot_slot": hot_slot, "is_hot": is_hot, "cold_ids": cold_ids,
+        "overflow": overflow,
+        "req_recv": None if routing is None else req_recv_saved,
+    }
+    return theta, routing, aux
+
+
+def _device_grads(cfg, axes, p, block, cap, kernel_impl,
+                  cold_loc, grads_slot, routing, aux):
+    """Reduce stages: per-feature sums delivered to owners + hot psum."""
+    me = jax.lax.axis_index(axes)
+    base = me * block
+    gflat = grads_slot.reshape(-1)
+
+    if cfg.distribution == "allgather":
+        f = cold_loc.shape[0] * p
+        gfull = jnp.zeros((f,), jnp.float32).at[
+            jnp.where(aux["cold_ids"] >= 0, aux["cold_ids"], f)
+        ].add(jnp.where(aux["cold_ids"] >= 0, gflat, 0.0), mode="drop")
+        grad_cold = jax.lax.psum_scatter(gfull, axes, scatter_dimension=0,
+                                         tiled=True)
+    else:
+        send = sparse.combine_grads(routing, gflat)
+        recv = jax.lax.all_to_all(send, axes, 0, 0, tiled=True)
+        grad_cold = sparse.owner_accumulate(
+            aux["req_recv"], recv, jnp.zeros_like(cold_loc), base)
+
+    hot_n = jnp.zeros((cfg.max_hot,), jnp.float32)
+    ghot = hot_n.at[jnp.where(aux["is_hot"], aux["hot_slot"],
+                              cfg.max_hot)].add(
+        jnp.where(aux["is_hot"], gflat, 0.0), mode="drop")
+    grad_hot = jax.lax.psum(ghot, axes)
+    return grad_cold, grad_hot
+
+
+def _metrics(axes, probs, labels, nll, overflow):
+    y = labels.astype(jnp.float32)
+    pred = (probs >= 0.5).astype(jnp.float32)
+    acc = jnp.mean((pred == y).astype(jnp.float32))
+    m = {
+        "loss": jax.lax.pmean(jnp.mean(nll), axes),
+        "accuracy": jax.lax.pmean(acc, axes),
+        "overflow": jax.lax.psum(overflow, axes),
+    }
+    return m
+
+
+# ---------------------------------------------------------------------------
+# public step builders
+# ---------------------------------------------------------------------------
+
+
+def make_step_fns(cfg: DPMRConfig, mesh, batch_size: int,
+                  kernel_impl: str = "jnp", cap_factor: float = 4.0):
+    """Build jitted {train_step, grad_step, apply_update, predict} for a
+    GLOBAL batch of `batch_size` samples (sharded over all mesh axes)."""
+    axes = _axes(mesh)
+    p = num_shards(mesh)
+    f = padded_features(cfg, mesh)
+    block = f // p
+    assert batch_size % p == 0, (batch_size, p)
+    cap = capacity(cfg, batch_size // p, mesh, cap_factor)
+
+    def _fwd_grads(cold_loc, hot, hot_ids, ids, vals, labels):
+        theta, routing, aux = _device_fwd(
+            cfg, axes, p, block, cap, kernel_impl,
+            cold_loc, hot, hot_ids, ids, vals)
+        grads_slot, probs, nll = ops.sigmoid_grad(
+            vals, theta, labels, impl=kernel_impl)
+        if cfg.grad_scale == "mean":
+            grads_slot = grads_slot / float(batch_size)
+        grad_cold, grad_hot = _device_grads(
+            cfg, axes, p, block, cap, kernel_impl,
+            cold_loc, grads_slot, routing, aux)
+        return grad_cold, grad_hot, _metrics(axes, probs, labels, nll,
+                                             aux["overflow"])
+
+    def train_dev(cold_loc, hot, hot_ids, cold_acc, hot_acc, step,
+                  ids, vals, labels):
+        grad_cold, grad_hot, m = _fwd_grads(cold_loc, hot, hot_ids,
+                                            ids, vals, labels)
+        lr = cfg.learning_rate
+        cold_new, cold_acc = optimize(cfg, cold_loc, cold_acc, grad_cold, lr)
+        hot_new, hot_acc = optimize(cfg, hot, hot_acc, grad_hot, lr)
+        return cold_new, hot_new, hot_ids, cold_acc, hot_acc, step + 1, m
+
+    def grad_dev(cold_loc, hot, hot_ids, ids, vals, labels):
+        return _fwd_grads(cold_loc, hot, hot_ids, ids, vals, labels)
+
+    def predict_dev(cold_loc, hot, hot_ids, ids, vals):
+        theta, _, _ = _device_fwd(cfg, axes, p, block, cap, kernel_impl,
+                                  cold_loc, hot, hot_ids, ids, vals)
+        logits = jnp.sum(vals * theta, axis=-1)
+        return jax.nn.sigmoid(logits)
+
+    shard = P(axes)
+    rep = P()
+    smap = functools.partial(jax.shard_map, mesh=mesh, check_vma=False)
+
+    train_m = smap(train_dev,
+                   in_specs=(shard, rep, rep, shard, rep, rep,
+                             shard, shard, shard),
+                   out_specs=(shard, rep, rep, shard, rep, rep, rep))
+    grad_m = smap(grad_dev,
+                  in_specs=(shard, rep, rep, shard, shard, shard),
+                  out_specs=(shard, rep, rep))
+    pred_m = smap(predict_dev,
+                  in_specs=(shard, rep, rep, shard, shard),
+                  out_specs=shard)
+
+    @jax.jit
+    def train_step(state: DPMRState, batch):
+        cold, hot, hot_ids, cold_acc, hot_acc, step, m = train_m(
+            state.cold, state.hot, state.hot_ids, state.cold_acc,
+            state.hot_acc, state.step,
+            batch["ids"], batch["vals"], batch["labels"])
+        return DPMRState(cold, hot, hot_ids, cold_acc, hot_acc, step), m
+
+    @jax.jit
+    def grad_step(state: DPMRState, batch):
+        return grad_m(state.cold, state.hot, state.hot_ids,
+                      batch["ids"], batch["vals"], batch["labels"])
+
+    @jax.jit
+    def apply_update(state: DPMRState, grad_cold, grad_hot, lr: float):
+        cold, cold_acc = optimize(cfg, state.cold, state.cold_acc,
+                                  grad_cold, lr)
+        hot, hot_acc = optimize(cfg, state.hot, state.hot_acc, grad_hot, lr)
+        return DPMRState(cold, hot, state.hot_ids, cold_acc, hot_acc,
+                         state.step + 1)
+
+    @jax.jit
+    def predict(state: DPMRState, batch):
+        return pred_m(state.cold, state.hot, state.hot_ids,
+                      batch["ids"], batch["vals"])
+
+    return {"train_step": train_step, "grad_step": grad_step,
+            "apply_update": apply_update, "predict": predict,
+            "capacity": cap, "block_size": block, "num_shards": p}

@@ -1,0 +1,70 @@
+"""Zipf hot-feature handling (paper §4, adapted).
+
+On Hadoop, a head feature's `feature -> sample` line spans ~20 HDFS blocks
+and serializes one reducer; the paper splits it into N sub-features. In SPMD
+the same skew shows up as per-owner request-buffer overflow (the a2a
+capacity). The adaptation: features above a frequency threshold are
+REPLICATED on every device (their parameters travel with the program, their
+gradients reduce over the full mesh with one psum), and only the Zipf tail
+goes through the a2a routing — which is near-uniform by hashing, so a small
+capacity factor suffices. `select_hot` is the initParameters-time frequency
+statistic the paper passes to its sharding mappers.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+INT_MAX = jnp.iinfo(jnp.int32).max
+
+
+def feature_counts(ids: jax.Array, num_features: int) -> jax.Array:
+    """Histogram of feature occurrences. ids: any shape, -1 = padding."""
+    flat = ids.reshape(-1)
+    return jnp.zeros((num_features,), jnp.int32).at[
+        jnp.where(flat >= 0, flat, num_features)
+    ].add(1, mode="drop")
+
+
+def select_hot(counts: jax.Array, threshold: float, max_hot: int
+               ) -> jax.Array:
+    """Pick features with frequency above `threshold`, capped at max_hot.
+
+    Returns (max_hot,) int32 sorted ascending, padded with INT_MAX so
+    searchsorted stays valid.
+    """
+    total = jnp.maximum(jnp.sum(counts), 1)
+    freq = counts.astype(jnp.float32) / total.astype(jnp.float32)
+    eligible = freq >= threshold
+    score = jnp.where(eligible, counts, -1)
+    top_counts, top_ids = jax.lax.top_k(score, max_hot)
+    ids = jnp.where(top_counts > 0, top_ids, INT_MAX)
+    return jnp.sort(ids).astype(jnp.int32)
+
+
+def split_hot(ids_flat: jax.Array, hot_ids: jax.Array
+              ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Partition flat ids into hot/cold.
+
+    Returns (hot_slot (n,) int32 index into hot_ids or -1,
+             is_hot (n,) bool,
+             cold_ids (n,) int32 with hot & padding replaced by -1).
+    """
+    pos = jnp.searchsorted(hot_ids, ids_flat)
+    pos_c = jnp.clip(pos, 0, hot_ids.shape[0] - 1)
+    is_hot = (hot_ids[pos_c] == ids_flat) & (ids_flat >= 0)
+    hot_slot = jnp.where(is_hot, pos_c, -1)
+    cold_ids = jnp.where(is_hot | (ids_flat < 0), -1, ids_flat)
+    return hot_slot, is_hot, cold_ids
+
+
+def load_imbalance(ids_flat: jax.Array, num_shards: int, block_size: int
+                   ) -> jax.Array:
+    """max/mean owner load for this device's cold ids (skew diagnostic)."""
+    owner = jnp.where(ids_flat >= 0, ids_flat // block_size, num_shards)
+    counts = jnp.zeros((num_shards,), jnp.int32).at[owner].add(
+        1, mode="drop")
+    mean = jnp.maximum(jnp.mean(counts.astype(jnp.float32)), 1e-6)
+    return jnp.max(counts).astype(jnp.float32) / mean

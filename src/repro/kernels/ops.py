@@ -1,0 +1,46 @@
+"""Jitted dispatch wrappers for the Pallas kernels.
+
+`impl` selects the backend:
+  - "pallas"            real TPU lowering (pl.pallas_call, interpret=False)
+  - "pallas_interpret"  kernel body executed in python on CPU (correctness)
+  - "jnp"               the pure-jnp oracle from ref.py
+
+This container is CPU-only, so the default everywhere is the oracle or the
+interpreted kernel; on a TPU deployment `impl="pallas"` is the hot path.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ref as _ref
+from repro.kernels import segment_sum as _ss
+from repro.kernels import sigmoid_grad as _sg
+
+DEFAULT_IMPL = "jnp"
+
+
+def sigmoid_grad(vals, theta, labels, *, impl: str = DEFAULT_IMPL,
+                 block_b: int = 256):
+    if impl == "jnp":
+        return _ref.sigmoid_grad_ref(vals, theta, labels)
+    return _sg.sigmoid_grad(vals, theta, labels, block_b=block_b,
+                            interpret=(impl == "pallas_interpret"))
+
+
+def segment_sum_sorted(ids, grads, *, impl: str = DEFAULT_IMPL,
+                       block: int = 256):
+    if impl == "jnp":
+        return _ref.segment_sum_sorted_ref(ids, grads)
+    return _ss.segment_sum_sorted(ids, grads, block=block,
+                                  interpret=(impl == "pallas_interpret"))
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    impl: str = DEFAULT_IMPL, block_q: int = 128,
+                    block_k: int = 128):
+    if impl == "jnp":
+        return _ref.flash_attention_ref(q, k, v, causal=causal)
+    return _fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                               block_k=block_k,
+                               interpret=(impl == "pallas_interpret"))

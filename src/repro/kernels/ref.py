@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def sigmoid_grad_ref(vals, theta, labels):
+    """DPMR computeGradients map body (Algorithm 6).
+
+    vals, theta: (B, K) f32 (0 at padded slots); labels: (B,) in {0, 1}.
+    Returns (per-slot grads (B, K), probs (B,), nll (B,)).
+
+    grad[b,k] = vals[b,k] * (sigma(logit_b) - y_b)   [d/dtheta of the NLL]
+    """
+    vals = vals.astype(jnp.float32)
+    theta = theta.astype(jnp.float32)
+    logits = jnp.sum(vals * theta, axis=-1)
+    probs = jax.nn.sigmoid(logits)
+    y = labels.astype(jnp.float32)
+    grads = vals * (probs - y)[:, None]
+    nll = -(y * jax.nn.log_sigmoid(logits)
+            + (1 - y) * jax.nn.log_sigmoid(-logits))
+    return grads, probs, nll
+
+
+def segment_sum_sorted_ref(ids, grads):
+    """DPMR reduce combiner: per-feature sums for SORTED ids.
+
+    ids: (N,) int32 sorted ascending; any negative id means padding (padding
+    sorts last upstream). Returns (N,) where each run's LAST position holds
+    the full run sum and all other positions are 0.
+    """
+    valid = ids >= 0
+    is_start = jnp.concatenate([jnp.ones((1,), bool), ids[1:] != ids[:-1]])
+    is_start = is_start & valid
+    is_end = jnp.concatenate([ids[:-1] != ids[1:], jnp.ones((1,), bool)])
+    is_end = is_end & valid
+    seg = jnp.cumsum(is_start.astype(jnp.int32)) - 1
+    g = jnp.where(valid, grads, 0.0)
+    sums = jax.ops.segment_sum(g, jnp.clip(seg, 0), num_segments=ids.shape[0])
+    return jnp.where(is_end, sums[jnp.clip(seg, 0)], 0.0)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """O(S^2) attention oracle. q: (B,Sq,H,D); k,v: (B,Skv,KH,D)."""
+    b, sq, h, d = q.shape
+    kh = k.shape[2]
+    if kh != h:
+        rep = h // kh
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(d)
+    if causal:
+        skv = k.shape[1]
+        mask = jnp.arange(sq)[:, None] + (skv - sq) >= jnp.arange(skv)[None, :]
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: segment-sum over SORTED feature ids (the DPMR reduce
+combiner, Algorithm 6's combiner/reducer adapted to the MXU).
+
+On Hadoop the combiner is a hash-aggregation; scatter-add is the XLA
+equivalent but lowers to serialized scatter on TPU. The TPU-native trick:
+with ids sorted, per-run sums are a *masked matmul* —
+    run_total[i] = sum_j grads[j] * (ids[j] == ids[i])
+computed blockwise on the MXU with an (Nb x Nb) equality mask, plus a scalar
+carry between consecutive blocks (grid steps run sequentially on a TPU core,
+so scratch persists across them).
+
+Output convention (== ref.segment_sum_sorted_ref): each run's total is
+emitted at the run's LAST slot; all other slots are 0. Emitting at the end
+makes the carry one-directional: a block adds the carried partial of a run
+that began earlier, and forwards its own trailing partial. The wrapper
+provides each block with the next block's first id so "does my trailing run
+continue?" is a local decision.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ids_ref, grads_ref, next_ref, out_ref, carry_id_ref,
+            carry_sum_ref, *, nb: int):
+    i = pl.program_id(0)
+    ids = ids_ref[...]
+    g = jnp.where(ids >= 0, grads_ref[...].astype(jnp.float32), 0.0)
+
+    @pl.when(i == 0)
+    def _init():
+        carry_id_ref[0] = jnp.int32(-1)
+        carry_sum_ref[0] = jnp.float32(0.0)
+
+    carry_id = carry_id_ref[0]
+    carry_sum = carry_sum_ref[0]
+
+    # (Nb, Nb) equality mask -> per-element run totals via MXU matmul
+    eq = (ids[:, None] == ids[None, :]) & (ids[:, None] >= 0)
+    totals = jnp.dot(eq.astype(jnp.float32), g,
+                     preferred_element_type=jnp.float32)
+    # elements of the run continuing from previous blocks get the carry
+    cont = (ids == carry_id) & (ids >= 0)
+    totals = totals + jnp.where(cont, carry_sum, 0.0)
+
+    # run ends: id differs from the next element (trailing: next block's 1st)
+    idx = jax.lax.broadcasted_iota(jnp.int32, (nb,), 0)
+    nxt = jnp.roll(ids, -1)
+    next_first = next_ref[0]
+    nxt = jnp.where(idx == nb - 1, next_first, nxt)
+    is_end = (ids != nxt) & (ids >= 0)
+
+    out_ref[...] = jnp.where(is_end, totals, 0.0).astype(out_ref.dtype)
+
+    # forward the trailing partial if the last run continues
+    last_id = ids[nb - 1]
+    continues = (last_id >= 0) & (last_id == next_first)
+    carry_id_ref[0] = jnp.where(continues, last_id, jnp.int32(-1))
+    carry_sum_ref[0] = jnp.where(continues, totals[nb - 1], jnp.float32(0.0))
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def segment_sum_sorted(ids, grads, *, block: int = 256,
+                       interpret: bool = True):
+    """ids: (N,) int32 sorted ascending (negatives = padding, sorted LAST by
+    the caller); grads: (N,) f32. Returns (N,) f32 with each run's total at
+    the run's last slot, 0 elsewhere."""
+    n = ids.shape[0]
+    nb = min(block, n)
+    if n % nb != 0:
+        nb = n
+    grid = n // nb
+    # next block's first id, per block (-2 => nothing follows)
+    next_ids = jnp.concatenate(
+        [ids[nb::nb], jnp.full((1,), -2, ids.dtype)])
+    return pl.pallas_call(
+        functools.partial(_kernel, nb=nb),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((nb,), lambda i: (i,)),
+            pl.BlockSpec((nb,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((nb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        scratch_shapes=[
+            pltpu.SMEM((1,), jnp.int32),
+            pltpu.SMEM((1,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(ids, grads, next_ids)

@@ -1,0 +1,39 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state — the dry-run sets
+XLA_FLAGS before first jax init and then calls this.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The target deployment mesh.
+
+    single pod:  (16, 16)    axes (data, model)   = 256 v5e chips
+    multi pod :  (2, 16, 16) axes (pod, data, model) = 512 chips, `pod` crosses DCN
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    auto = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=auto)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist locally (tests / examples)."""
+    n = len(jax.devices())
+    if data * model > n:
+        raise ValueError(f"need {data * model} devices, have {n}")
+    auto = (jax.sharding.AxisType.Auto,) * 2
+    return jax.make_mesh((data, model), ("data", "model"), axis_types=auto)
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes the global batch is sharded over (DP axes present in mesh)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def axis_size(mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1

@@ -1,0 +1,113 @@
+"""Shared model plumbing: def stacking for scan, embedding, LM head, loss."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding import Annotated
+
+
+def scan_or_unroll(body, carry, xs, unroll: bool = False):
+    """lax.scan, or an equivalent python loop when unroll=True.
+
+    The unrolled form exists for the dry-run's cost probes: XLA's
+    cost_analysis counts a while-loop body ONCE (trip count not folded), so
+    exact per-step FLOP/collective accounting lowers 1- and 2-layer unrolled
+    probes and extrapolates (benchmarks/roofline.py).
+    """
+    if not unroll:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        xi = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    if ys and jax.tree.leaves(ys[0]):
+        ys = jax.tree.map(lambda *a: jnp.stack(a, 0), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def stack_defs(defs, num: int, axis_name: str = "layers"):
+    """Add a leading `num`-sized dim to every Annotated leaf (for lax.scan)."""
+    return jax.tree.map(
+        lambda a: Annotated((num,) + a.shape, a.dtype, (axis_name,) + a.logical),
+        defs,
+        is_leaf=lambda x: isinstance(x, Annotated),
+    )
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    """Vocab padded to a multiple of 256 so the vocab dim always shards over
+    the 16-way model axis (whisper's 51865 is otherwise coprime with 16 and
+    the logits replicate — 108 GiB/device at prefill_32k). Padded logits are
+    masked to -inf in lm_head; labels never reference them."""
+    return -(-cfg.vocab_size // 256) * 256
+
+
+def embed_defs(cfg: ModelConfig) -> dict:
+    v = padded_vocab(cfg)
+    d = {
+        "embed": Annotated(
+            (v, cfg.d_model), cfg.param_dtype, ("vocab", "embed")
+        ),
+        "ln_f": Annotated((cfg.d_model,), cfg.param_dtype, (None,)),
+    }
+    if not cfg.tie_embeddings:
+        d["unembed"] = Annotated(
+            (cfg.d_model, v), cfg.param_dtype, ("embed", "vocab")
+        )
+    return d
+
+
+def embed_tokens(params, tokens, cfg: ModelConfig):
+    """Token embedding lookup.
+
+    The table is sharded (vocab -> model axis, embed -> data axis): this is
+    the DPMR sparse face's storage layout — parameter rows co-located with
+    the devices that own data shards. GSPMD lowers the gather to either a
+    vocab-dim all-gather of the table shard or a masked-partial + all-reduce
+    (= distributeParameters); both are recorded in the dry-run collectives.
+    """
+    emb = jnp.take(params["embed"], tokens, axis=0)
+    return emb.astype(jnp.dtype(cfg.dtype))
+
+
+def lm_head(params, x, cfg: ModelConfig):
+    table = (
+        params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    )
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x, table.astype(x.dtype),
+        preferred_element_type=jnp.float32
+    )
+    v = logits.shape[-1]
+    if v != cfg.vocab_size:
+        # mask the padded vocab tail (see padded_vocab)
+        mask = jnp.arange(v) < cfg.vocab_size
+        logits = jnp.where(mask, logits, -1e30)
+    return logits
+
+
+def cross_entropy(logits, labels, mask: Optional[jax.Array] = None):
+    """logits: (B, S, V) f32; labels: (B, S) int32. Returns mean nll."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def embed_init_scale(ann: Annotated) -> float:
+    """Flat 0.02 init stddev (GPT-2 style): predictable activation scale for
+    smoke tests at any width; full-scale params are never materialized (the
+    dry-run uses ShapeDtypeStructs)."""
+    return 0.02

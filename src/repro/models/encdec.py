@@ -1,0 +1,215 @@
+"""Whisper-style encoder-decoder backbone.
+
+The audio conv frontend is a STUB per the assignment: the encoder consumes
+precomputed frame embeddings (B, S_enc, D) supplied by input_specs(). No
+RoPE (rope_theta=0); sinusoidal absolute positions are added to both sides.
+Decode shapes lower the decoder serve step: self-attention KV cache of
+seq_len slots + precomputed cross-attention K/V over the encoded frames
+(ENC_FRAMES positions, whisper's native 1500).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.models import common, layers
+from repro.sharding import Annotated
+
+ENC_FRAMES = 1500
+
+
+def encdec_defs(cfg: ModelConfig) -> dict:
+    enc_layer = {
+        "attn": layers.attn_defs(cfg),
+        "mlp": layers.mlp_defs(cfg),
+        "ln1": Annotated((cfg.d_model,), cfg.param_dtype, (None,)),
+        "ln2": Annotated((cfg.d_model,), cfg.param_dtype, (None,)),
+    }
+    dec_layer = {
+        "attn": layers.attn_defs(cfg),
+        "xattn": layers.attn_defs(cfg),
+        "mlp": layers.mlp_defs(cfg),
+        "ln1": Annotated((cfg.d_model,), cfg.param_dtype, (None,)),
+        "lnx": Annotated((cfg.d_model,), cfg.param_dtype, (None,)),
+        "ln2": Annotated((cfg.d_model,), cfg.param_dtype, (None,)),
+    }
+    return {
+        "encoder": common.stack_defs(enc_layer, cfg.encoder_layers),
+        "ln_enc": Annotated((cfg.d_model,), cfg.param_dtype, (None,)),
+        "layers": common.stack_defs(dec_layer, cfg.num_layers),
+        **common.embed_defs(cfg),
+    }
+
+
+def encode(params, frames, cfg: ModelConfig, parallel=None):
+    """frames: (B, S_enc, D) stub embeddings -> (B, S_enc, D)."""
+    parallel = parallel or ParallelConfig()
+    b, s, d = frames.shape
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    x = x + layers.sinusoidal_positions(s, d, x.dtype)[None]
+
+    def body(x, lp):
+        h = layers.layer_norm(x, lp["ln1"], cfg.norm_eps)
+        x = x + layers.attention_block(lp["attn"], h, cfg, None, causal=False,
+                                       attn_mode=parallel.attn_mode)
+        h = layers.layer_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + layers.mlp_block(lp["mlp"], h, cfg)
+        return x, None
+
+    if parallel.remat != "none":
+        body = jax.checkpoint(body)
+    x, _ = common.scan_or_unroll(body, x, params["encoder"],
+                                 unroll=not parallel.scan_layers)
+    return layers.layer_norm(x, params["ln_enc"], cfg.norm_eps)
+
+
+def decode_train(params, tokens, enc_out, cfg: ModelConfig, parallel=None):
+    """Teacher-forced decoder -> logits (B, S_dec, V)."""
+    parallel = parallel or ParallelConfig()
+    b, s = tokens.shape
+    x = common.embed_tokens(params, tokens, cfg)
+    x = x + layers.sinusoidal_positions(s, cfg.d_model, x.dtype)[None]
+
+    def body(x, lp):
+        h = layers.layer_norm(x, lp["ln1"], cfg.norm_eps)
+        x = x + layers.attention_block(lp["attn"], h, cfg, None, causal=True,
+                                       attn_mode=parallel.attn_mode)
+        h = layers.layer_norm(x, lp["lnx"], cfg.norm_eps)
+        x = x + layers.attention_block(lp["xattn"], h, cfg, None,
+                                       causal=False, kv_x=enc_out,
+                                       attn_mode=parallel.attn_mode)
+        h = layers.layer_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + layers.mlp_block(lp["mlp"], h, cfg)
+        return x, None
+
+    if parallel.remat != "none":
+        body = jax.checkpoint(body)
+    x, _ = common.scan_or_unroll(body, x, params["layers"],
+                                 unroll=not parallel.scan_layers)
+    x = layers.layer_norm(x, params["ln_f"], cfg.norm_eps)
+    return common.lm_head(params, x, cfg)
+
+
+def forward(params, batch, cfg: ModelConfig, parallel=None):
+    """batch: {frames (B,S,D), tokens (B,S)} -> (logits, aux)."""
+    enc_out = encode(params, batch["frames"], cfg, parallel)
+    logits = decode_train(params, batch["tokens"], enc_out, cfg, parallel)
+    return logits, jnp.float32(0.0)
+
+
+def cache_defs(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    kh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    logical = ("layers", "batch", None, "kv_heads", None) if kh % 16 == 0 \
+        else ("layers", "batch", "kv_seq", None, None)
+    self_kv = Annotated((cfg.num_layers, batch, max_len, kh, hd), cfg.dtype,
+                        logical)
+    cross_kv = Annotated((cfg.num_layers, batch, ENC_FRAMES, kh, hd),
+                         cfg.dtype,
+                         ("layers", "batch", None, "kv_heads", None))
+    return {
+        "k": self_kv,
+        "v": Annotated(self_kv.shape, cfg.dtype, self_kv.logical),
+        "xk": cross_kv,
+        "xv": Annotated(cross_kv.shape, cfg.dtype, cross_kv.logical),
+        "length": Annotated((batch,), "int32", ("batch",)),
+    }
+
+
+def precompute_cross_kv(params, enc_out, cfg: ModelConfig):
+    """Build the cross-attention K/V once per request (prefill side)."""
+
+    def per_layer(lp, _):
+        k, v = layers.project_kv(lp["xattn"], enc_out, cfg)
+        return None, (k, v)
+
+    _, (ks, vs) = jax.lax.scan(
+        lambda c, lp: per_layer(lp, c), None, params["layers"]
+    )
+    return ks, vs
+
+
+def prefill(params, batch, cfg: ModelConfig, parallel=None):
+    """Encode + teacher-forced decoder prefill.
+
+    batch: {frames (B,S_enc,D), tokens (B,S_dec)}.
+    Returns (last-token logits, cache with self-KV over S_dec slots and
+    cross-KV over the encoded frames).
+    """
+    parallel = parallel or ParallelConfig()
+    enc_out = encode(params, batch["frames"], cfg, parallel)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = common.embed_tokens(params, tokens, cfg)
+    x = x + layers.sinusoidal_positions(s, cfg.d_model, x.dtype)[None]
+
+    def body(x, lp):
+        h = layers.layer_norm(x, lp["ln1"], cfg.norm_eps)
+        q = layers.project_q(lp["attn"], h, cfg)
+        k, v = layers.project_kv(lp["attn"], h, cfg)
+        att = layers.blocked_causal_attention(q, k, v)
+        x = x + layers.project_out(lp["attn"], att, x.dtype)
+        h = layers.layer_norm(x, lp["lnx"], cfg.norm_eps)
+        xk, xv = layers.project_kv(lp["xattn"], enc_out, cfg)
+        qx = layers.project_q(lp["xattn"], h, cfg)
+        attx = layers._bidirectional_blocked(qx, xk, xv)
+        x = x + layers.project_out(lp["xattn"], attx, x.dtype)
+        h = layers.layer_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + layers.mlp_block(lp["mlp"], h, cfg)
+        return x, (k, v, xk, xv)
+
+    if parallel.remat != "none":
+        body = jax.checkpoint(body)
+    x, (k_all, v_all, xk_all, xv_all) = common.scan_or_unroll(
+        body, x, params["layers"], unroll=not parallel.scan_layers)
+    x = layers.layer_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = common.lm_head(params, x[:, -1:], cfg)
+    pad = ((0, 0), (0, 0), (0, 32), (0, 0), (0, 0))   # decode headroom
+    cache = {"k": jnp.pad(k_all, pad), "v": jnp.pad(v_all, pad),
+             "xk": xk_all, "xv": xv_all,
+             "length": jnp.full((b,), s, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig,
+                unroll: bool = False):
+    """One decoder token. tokens: (B, 1)."""
+    b = tokens.shape[0]
+    pos = cache["length"]
+    x = common.embed_tokens(params, tokens, cfg)
+    # gather per-batch sinusoidal position embedding
+    postab = layers.sinusoidal_positions(cache["k"].shape[2], cfg.d_model,
+                                         x.dtype)
+    x = x + postab[jnp.minimum(pos, postab.shape[0] - 1)][:, None, :]
+
+    def body(x, per_layer):
+        lp, k_l, v_l, xk_l, xv_l = per_layer
+        h = layers.layer_norm(x, lp["ln1"], cfg.norm_eps)
+        q = layers.project_q(lp["attn"], h, cfg)
+        k_new, v_new = layers.project_kv(lp["attn"], h, cfg)
+        slot = jnp.minimum(pos, k_l.shape[1] - 1)
+        oh = jax.nn.one_hot(slot, k_l.shape[1],
+                            dtype=k_l.dtype)[:, :, None, None]
+        k_l = k_l * (1 - oh) + k_new[:, 0][:, None] * oh
+        v_l = v_l * (1 - oh) + v_new[:, 0][:, None] * oh
+        att = layers.decode_attention(q, k_l, v_l, pos + 1)
+        x = x + layers.project_out(lp["attn"], att, x.dtype)
+
+        h = layers.layer_norm(x, lp["lnx"], cfg.norm_eps)
+        qx = layers.project_q(lp["xattn"], h, cfg)
+        attx = layers.decode_attention(qx, xk_l, xv_l,
+                                       jnp.full((b,), xk_l.shape[1]))
+        x = x + layers.project_out(lp["xattn"], attx, x.dtype)
+
+        h = layers.layer_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + layers.mlp_block(lp["mlp"], h, cfg)
+        return x, (k_l, v_l)
+
+    x, (k_all, v_all) = common.scan_or_unroll(
+        body, x, (params["layers"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]), unroll=unroll
+    )
+    x = layers.layer_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = common.lm_head(params, x, cfg)
+    new_cache = dict(cache, k=k_all, v=v_all, length=cache["length"] + 1)
+    return logits, new_cache

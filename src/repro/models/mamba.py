@@ -1,0 +1,342 @@
+"""Mamba2 (SSD) blocks + the zamba2 hybrid backbone.
+
+zamba2: a stack of Mamba2 blocks with a *shared* transformer block (attention
++ MLP, one set of weights) applied every `attn_every` layers — the zamba
+signature. The SSD core is `ssm_common.chunked_linear_attention` with
+q=C, k=B, v=x_heads, per-head scalar decay exp(dt * -exp(A_log)).
+
+Decode carries per-layer SSD state (B, H, N, P) + a conv tail ring — O(1) per
+token, which is why zamba2 runs the long_500k shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.models import common, layers, ssm_common
+from repro.sharding import Annotated
+
+P_HEAD = 64      # SSD head dim (mamba2 default)
+CONV_K = 4       # depthwise conv kernel size
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // P_HEAD
+    return d_inner, nheads, cfg.ssm_state
+
+
+def mamba_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di, h, n = _dims(cfg)
+    pt = cfg.param_dtype
+    return {
+        "norm": Annotated((d,), pt, (None,)),
+        "wx": Annotated((d, di), pt, ("embed", "ssm_inner")),
+        "wz": Annotated((d, di), pt, ("embed", "ssm_inner")),
+        "wB": Annotated((d, n), pt, ("embed", None)),
+        "wC": Annotated((d, n), pt, ("embed", None)),
+        "wdt": Annotated((d, h), pt, ("embed", "ssm_heads")),
+        "dt_bias": Annotated((h,), pt, (None,)),
+        "A_log": Annotated((h,), pt, (None,)),
+        "D_skip": Annotated((h,), pt, (None,)),
+        "conv": Annotated((CONV_K, di), pt, (None, "ssm_inner")),
+        "out_norm": Annotated((di,), pt, (None,)),
+        "wo": Annotated((di, d), pt, ("ssm_inner", "embed")),
+    }
+
+
+def _conv1d(x, kernel):
+    """Causal depthwise conv. x: (B,S,C); kernel: (K,C)."""
+    k = kernel.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):
+        out = out + xp[:, i : i + x.shape[1], :].astype(jnp.float32) * kernel[i].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def _ssd_inputs(p, x, cfg: ModelConfig):
+    di, h, n = _dims(cfg)
+    xin = jnp.einsum("bsd,de->bse", x, p["wx"].astype(x.dtype),
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    z = jnp.einsum("bsd,de->bse", x, p["wz"].astype(x.dtype),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    Bm = jnp.einsum("bsd,dn->bsn", x, p["wB"].astype(x.dtype),
+                    preferred_element_type=jnp.float32)
+    Cm = jnp.einsum("bsd,dn->bsn", x, p["wC"].astype(x.dtype),
+                    preferred_element_type=jnp.float32)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["wdt"].astype(x.dtype),
+                   preferred_element_type=jnp.float32)
+        + p["dt_bias"].astype(jnp.float32)
+    )                                                     # (B,S,H) f32
+    return xin, z, Bm, Cm, dt
+
+
+def mamba_block(p, x, cfg: ModelConfig, return_state: bool = False):
+    """Train/prefill SSD block. x: (B,S,D) -> (B,S,D).
+
+    If return_state, also returns (conv_tail (B,K-1,di), ssd_state (B,H,N,P))
+    for the prefill -> decode handoff.
+    """
+    di, h, n = _dims(cfg)
+    b, s, _ = x.shape
+    hdd = layers.rms_norm(x, p["norm"], cfg.norm_eps)
+    xin_raw, z, Bm, Cm, dt = _ssd_inputs(p, hdd, cfg)
+    xin = _conv1d(xin_raw, p["conv"])
+    xin = jax.nn.silu(xin.astype(jnp.float32)).astype(x.dtype)
+
+    xh = xin.reshape(b, s, h, P_HEAD)
+    log_a = -jnp.exp(p["A_log"].astype(jnp.float32))[None, None, :] * dt
+    # broadcast single B/C group across heads; dt scales the input (v)
+    k = jnp.broadcast_to(Bm[:, :, None, :], (b, s, h, n))
+    q = jnp.broadcast_to(Cm[:, :, None, :], (b, s, h, n))
+    v = xh * dt[..., None]
+    res = ssm_common.chunked_linear_attention(
+        q, k, v, log_a, chunk=min(128, s), return_state=return_state,
+        unroll=layers.PROBE_UNROLL)
+    y, state = res if return_state else (res, None)
+    y = y + xh.astype(jnp.float32) * p["D_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = layers.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                        p["out_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["wo"].astype(x.dtype),
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    if return_state:
+        tail = xin_raw[:, -(CONV_K - 1):]
+        if s < CONV_K - 1:
+            tail = jnp.pad(xin_raw, ((0, 0), (CONV_K - 1 - s, 0), (0, 0)))
+        return x + out, (tail, state[0])
+    return x + out
+
+
+def mamba_decode_step(p, x, cfg: ModelConfig, conv_buf, ssd_state):
+    """One-token step. x: (B,1,D); conv_buf: (B,K-1,di); ssd_state: (B,H,N,P).
+
+    Returns (x_out, conv_buf, ssd_state).
+    """
+    di, h, n = _dims(cfg)
+    b = x.shape[0]
+    hdd = layers.rms_norm(x, p["norm"], cfg.norm_eps)
+    xin, z, Bm, Cm, dt = _ssd_inputs(p, hdd, cfg)
+    # conv over ring buffer [buf, xin]
+    seqbuf = jnp.concatenate([conv_buf, xin], axis=1)       # (B,K,di)
+    conv_out = jnp.einsum("bkc,kc->bc", seqbuf.astype(jnp.float32),
+                          p["conv"].astype(jnp.float32))
+    xin1 = jax.nn.silu(conv_out).astype(x.dtype)            # (B,di)
+    new_buf = seqbuf[:, 1:]
+
+    xh = xin1.reshape(b, h, P_HEAD)
+    dt1 = dt[:, 0]                                          # (B,H)
+    log_a = -jnp.exp(p["A_log"].astype(jnp.float32))[None, :] * dt1
+    k = jnp.broadcast_to(Bm[:, 0, None, :], (b, h, n))
+    q = jnp.broadcast_to(Cm[:, 0, None, :], (b, h, n))
+    v = xh * dt1[..., None]
+    y, ssd_state, _ = ssm_common.linear_attention_step(ssd_state, q, k, v, log_a)
+    y = y + xh.astype(jnp.float32) * p["D_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = layers.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                        p["out_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["wo"].astype(x.dtype),
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return x + out, new_buf, ssd_state
+
+
+# ---------------------------------------------------------------------------
+# zamba2 hybrid backbone
+# ---------------------------------------------------------------------------
+
+
+def _n_inv(cfg: ModelConfig) -> int:
+    every = max(cfg.attn_every, 1)
+    assert cfg.num_layers % every == 0, (cfg.num_layers, every)
+    return cfg.num_layers // every
+
+
+def zamba_defs(cfg: ModelConfig) -> dict:
+    shared = {
+        "attn": layers.attn_defs(cfg),
+        "mlp": layers.mlp_defs(cfg),
+        "ln1": Annotated((cfg.d_model,), cfg.param_dtype, (None,)),
+        "ln2": Annotated((cfg.d_model,), cfg.param_dtype, (None,)),
+    }
+    return {
+        "layers": common.stack_defs(mamba_defs(cfg), cfg.num_layers),
+        "shared": shared,                       # ONE shared attention block
+        **common.embed_defs(cfg),
+    }
+
+
+def _group_params(params, cfg: ModelConfig, g: int):
+    """Slice layer-group g (of `every` consecutive mamba layers)."""
+    every = max(cfg.attn_every, 1)
+    n = _n_inv(cfg)
+    return jax.tree.map(
+        lambda a: a.reshape((n, every) + a.shape[1:])[g], params["layers"]
+    )
+
+
+def _shared_block(params, x, cfg: ModelConfig, positions):
+    sp = params["shared"]
+    h = layers.rms_norm(x, sp["ln1"], cfg.norm_eps)
+    x = x + layers.attention_block(sp["attn"], h, cfg, positions)
+    h = layers.rms_norm(x, sp["ln2"], cfg.norm_eps)
+    return x + layers.mlp_block(sp["mlp"], h, cfg)
+
+
+def zamba_forward(params, tokens, cfg: ModelConfig, parallel=None):
+    """Groups of `attn_every` mamba layers, each followed by the SHARED
+    attention block (weights reused across all invocations)."""
+    parallel = parallel or ParallelConfig()
+    b, s = tokens.shape
+    x = common.embed_tokens(params, tokens, cfg)
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
+
+    def group(x, gp):
+        def body(x, lp):
+            return mamba_block(lp, x, cfg), None
+
+        x, _ = common.scan_or_unroll(body, x, gp,
+                                     unroll=not parallel.scan_layers)
+        return _shared_block(params, x, cfg, positions)
+
+    gfn = jax.checkpoint(group) if parallel.remat != "none" else group
+    for g in range(_n_inv(cfg)):
+        x = gfn(x, _group_params(params, cfg, g))
+
+    x = layers.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return common.lm_head(params, x, cfg), jnp.float32(0.0)
+
+
+def zamba_cache_defs(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    di, h, n = _dims(cfg)
+    ninv = _n_inv(cfg)
+    logical = (None, "batch", None, "kv_heads", None) \
+        if cfg.num_kv_heads % 16 == 0 else \
+        (None, "batch", "kv_seq", None, None)
+    kv = Annotated((ninv, batch, max_len, cfg.num_kv_heads,
+                    cfg.resolved_head_dim), cfg.dtype, logical)
+    return {
+        "conv": Annotated((cfg.num_layers, batch, CONV_K - 1, di), cfg.dtype,
+                          ("layers", "batch", None, "ssm_inner")),
+        "ssd": Annotated((cfg.num_layers, batch, h, n, P_HEAD), "float32",
+                         ("layers", "batch", "ssm_heads", None, None)),
+        "k": kv,
+        "v": Annotated(kv.shape, cfg.dtype, kv.logical),
+        "length": Annotated((batch,), "int32", ("batch",)),
+    }
+
+
+def zamba_prefill(params, tokens, cfg: ModelConfig, parallel=None):
+    """Prefill -> (last-token logits, cache per zamba_cache_defs)."""
+    parallel = parallel or ParallelConfig()
+    b, s = tokens.shape
+    x = common.embed_tokens(params, tokens, cfg)
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
+    sp = params["shared"]
+
+    conv_all, ssd_all, k_all, v_all = [], [], [], []
+
+    def group(x, gp):
+        def body(x, lp):
+            x, st = mamba_block(lp, x, cfg, return_state=True)
+            return x, st
+
+        x, (convs, ssds) = common.scan_or_unroll(
+            body, x, gp, unroll=not parallel.scan_layers)
+        # shared block, capturing its K/V for this invocation
+        h = layers.rms_norm(x, sp["ln1"], cfg.norm_eps)
+        q = layers.project_q(sp["attn"], h, cfg)
+        k, v = layers.project_kv(sp["attn"], h, cfg)
+        if cfg.rope_theta:
+            sin, cos = layers.rope_tables(positions, cfg.resolved_head_dim,
+                                          cfg.rope_theta)
+            q = layers.apply_rope(q, sin, cos)
+            k = layers.apply_rope(k, sin, cos)
+        att = layers.blocked_causal_attention(q, k, v)
+        x = x + layers.project_out(sp["attn"], att, x.dtype)
+        h = layers.rms_norm(x, sp["ln2"], cfg.norm_eps)
+        x = x + layers.mlp_block(sp["mlp"], h, cfg)
+        return x, (convs, ssds, k, v)
+
+    gfn = jax.checkpoint(group) if parallel.remat != "none" else group
+    for g in range(_n_inv(cfg)):
+        x, (convs, ssds, k, v) = gfn(x, _group_params(params, cfg, g))
+        conv_all.append(convs)
+        ssd_all.append(ssds)
+        k_all.append(k)
+        v_all.append(v)
+
+    x = layers.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = common.lm_head(params, x[:, -1:], cfg)
+    pad = ((0, 0), (0, 0), (0, 32), (0, 0), (0, 0))   # decode headroom
+    cache = {
+        "conv": jnp.concatenate(conv_all, 0),
+        "ssd": jnp.concatenate(ssd_all, 0),
+        "k": jnp.pad(jnp.stack(k_all, 0), pad),
+        "v": jnp.pad(jnp.stack(v_all, 0), pad),
+        "length": jnp.full((b,), s, jnp.int32),
+    }
+    return logits, cache
+
+
+def zamba_decode_step(params, cache, tokens, cfg: ModelConfig,
+                      unroll: bool = False):
+    """O(1) SSM state + per-invocation full-length attention KV caches."""
+    b = tokens.shape[0]
+    x = common.embed_tokens(params, tokens, cfg)
+    pos = cache["length"]
+    sp = params["shared"]
+    ninv, every = _n_inv(cfg), max(cfg.attn_every, 1)
+    max_len = cache["k"].shape[2]
+    bidx = jnp.arange(b)
+    slot = jnp.minimum(pos, max_len - 1)
+
+    new_conv, new_ssd, new_k, new_v = [], [], [], []
+    for g in range(ninv):
+        gp = _group_params(params, cfg, g)
+        conv_g = jax.lax.dynamic_slice_in_dim(cache["conv"], g * every, every, 0)
+        ssd_g = jax.lax.dynamic_slice_in_dim(cache["ssd"], g * every, every, 0)
+
+        def body(x, xs):
+            lp, conv_l, ssd_l = xs
+            x, conv_l, ssd_l = mamba_decode_step(lp, x, cfg, conv_l, ssd_l)
+            return x, (conv_l, ssd_l)
+
+        x, (conv_g, ssd_g) = common.scan_or_unroll(
+            body, x, (gp, conv_g, ssd_g), unroll=unroll)
+        new_conv.append(conv_g)
+        new_ssd.append(ssd_g)
+
+        # shared attention with this invocation's cache
+        h = layers.rms_norm(x, sp["ln1"], cfg.norm_eps)
+        q = layers.project_q(sp["attn"], h, cfg)
+        k_new, v_new = layers.project_kv(sp["attn"], h, cfg)
+        if cfg.rope_theta:
+            sin, cos = layers.rope_tables(pos[:, None], cfg.resolved_head_dim,
+                                          cfg.rope_theta)
+            q = layers.apply_rope(q, sin, cos)
+            k_new = layers.apply_rope(k_new, sin, cos)
+        oh = jax.nn.one_hot(slot, max_len,
+                            dtype=cache["k"].dtype)[:, :, None, None]
+        k_g = cache["k"][g] * (1 - oh) + k_new[:, 0][:, None] * oh
+        v_g = cache["v"][g] * (1 - oh) + v_new[:, 0][:, None] * oh
+        att = layers.decode_attention(q, k_g, v_g, pos + 1)
+        x = x + layers.project_out(sp["attn"], att, x.dtype)
+        h = layers.rms_norm(x, sp["ln2"], cfg.norm_eps)
+        x = x + layers.mlp_block(sp["mlp"], h, cfg)
+        new_k.append(k_g)
+        new_v.append(v_g)
+
+    x = layers.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = common.lm_head(params, x, cfg)
+    new_cache = {
+        "conv": jnp.concatenate(new_conv, 0),
+        "ssd": jnp.concatenate(new_ssd, 0),
+        "k": jnp.stack(new_k, 0),
+        "v": jnp.stack(new_v, 0),
+        "length": cache["length"] + 1,
+    }
+    return logits, new_cache

@@ -1,0 +1,175 @@
+"""Architecture registry: arch id -> defs/forward/prefill/decode + input specs.
+
+Every assigned architecture is selectable by id (``--arch``). `input_specs`
+returns Annotated trees (shape/dtype/logical axes) — the dry-run converts
+them to ShapeDtypeStructs + NamedShardings without allocating anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, mamba, transformer, xlstm
+from repro.sharding import Annotated
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    cfg: ModelConfig
+    defs: Callable                  # (cfg) -> params defs tree
+    forward: Callable               # (params, batch, cfg, parallel) -> (logits, aux)
+    prefill: Optional[Callable]     # (params, batch, cfg, parallel) -> (logits, cache)
+    decode_step: Optional[Callable]  # (params, cache, tokens, cfg) -> (logits, cache)
+    cache_defs: Optional[Callable]  # (cfg, batch, max_len) -> cache defs
+    supported_shapes: Tuple[str, ...]
+    skip_reason: str = ""           # why some shapes are skipped (DESIGN.md)
+
+
+def _lm_forward(params, batch, cfg, parallel=None):
+    return transformer.forward(params, batch["tokens"], cfg, parallel)
+
+
+def _lm_prefill(params, batch, cfg, parallel=None):
+    return transformer.prefill(params, batch["tokens"], cfg, parallel)
+
+
+def _zamba_forward(params, batch, cfg, parallel=None):
+    return mamba.zamba_forward(params, batch["tokens"], cfg, parallel)
+
+
+def _zamba_prefill(params, batch, cfg, parallel=None):
+    return mamba.zamba_prefill(params, batch["tokens"], cfg, parallel)
+
+
+def _xlstm_forward(params, batch, cfg, parallel=None):
+    return xlstm.xlstm_forward(params, batch["tokens"], cfg, parallel)
+
+
+def _xlstm_prefill(params, batch, cfg, parallel=None):
+    return xlstm.xlstm_prefill(params, batch["tokens"], cfg, parallel)
+
+
+def _xlstm_cache_defs(cfg, batch, max_len):
+    return xlstm.xlstm_cache_defs(cfg, batch)
+
+
+_FULL_ATTN = ("train_4k", "prefill_32k", "decode_32k")
+_ALL = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+_FAMILY = {
+    "dense": dict(defs=transformer.transformer_defs, forward=_lm_forward,
+                  prefill=_lm_prefill, decode_step=transformer.decode_step,
+                  cache_defs=transformer.cache_defs),
+    "hybrid": dict(defs=mamba.zamba_defs, forward=_zamba_forward,
+                   prefill=_zamba_prefill, decode_step=mamba.zamba_decode_step,
+                   cache_defs=mamba.zamba_cache_defs),
+    "ssm": dict(defs=xlstm.xlstm_defs, forward=_xlstm_forward,
+                prefill=_xlstm_prefill, decode_step=xlstm.xlstm_decode_step,
+                cache_defs=_xlstm_cache_defs),
+    "encdec": dict(defs=encdec.encdec_defs, forward=encdec.forward,
+                   prefill=encdec.prefill, decode_step=encdec.decode_step,
+                   cache_defs=encdec.cache_defs),
+}
+_FAMILY["moe"] = _FAMILY["dense"]
+_FAMILY["vlm"] = _FAMILY["dense"]
+
+
+def get_spec(arch_id: str) -> ArchSpec:
+    cfg = get_config(arch_id)
+    fam = _FAMILY[cfg.family]
+    if cfg.family in ("hybrid", "ssm"):
+        shapes, reason = _ALL, ""
+    elif cfg.sliding_window:
+        shapes, reason = _ALL, ""          # SWA: bounded cache at 500k
+    elif cfg.family == "encdec":
+        shapes = _FULL_ATTN
+        reason = "long_500k skipped: full attention, quadratic at 512k"
+    else:
+        shapes = _FULL_ATTN
+        reason = "long_500k skipped: pure full attention (dense KV cache)"
+    return ArchSpec(arch_id=arch_id, cfg=cfg, supported_shapes=shapes,
+                    skip_reason=reason, **fam)
+
+
+def all_specs():
+    return [get_spec(a) for a in ARCH_IDS]
+
+
+# ---------------------------------------------------------------------------
+# input specs per (arch x shape)
+# ---------------------------------------------------------------------------
+
+
+def train_batch_defs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    toks = Annotated((b, s), "int32", ("batch", None))
+    batch = {"tokens": toks, "labels": Annotated((b, s), "int32",
+                                                 ("batch", None))}
+    if cfg.family == "encdec":
+        batch["frames"] = Annotated((b, s, cfg.d_model), cfg.dtype,
+                                    ("batch", None, None))
+    return batch
+
+
+def prefill_batch_defs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": Annotated((b, s), "int32", ("batch", None))}
+    if cfg.family == "encdec":
+        batch["frames"] = Annotated((b, s, cfg.d_model), cfg.dtype,
+                                    ("batch", None, None))
+    return batch
+
+
+def decode_batch_defs(cfg: ModelConfig, shape: ShapeConfig,
+                      spec: ArchSpec) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    return {
+        "tokens": Annotated((b, 1), "int32", ("batch", None)),
+        "cache": spec.cache_defs(cfg, b, s),
+    }
+
+
+def batch_defs(spec: ArchSpec, shape: ShapeConfig) -> dict:
+    if shape.kind == "train":
+        return train_batch_defs(spec.cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_batch_defs(spec.cfg, shape)
+    return decode_batch_defs(spec.cfg, shape, spec)
+
+
+# ---------------------------------------------------------------------------
+# reduced configs for smoke tests
+# ---------------------------------------------------------------------------
+
+
+def smoke_config(arch_id: str) -> ModelConfig:
+    """Same-family reduced config: tiny widths, few layers/experts."""
+    cfg = get_config(arch_id)
+    r = dict(
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=min(cfg.num_kv_heads, 2) if cfg.num_kv_heads < cfg.num_heads else 4,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab_size=256,
+        head_dim=16,
+        param_dtype="float32",
+        dtype="float32",
+    )
+    if cfg.num_experts:
+        r.update(num_experts=4, experts_per_token=2)
+    if cfg.sliding_window:
+        r.update(sliding_window=8)
+    if cfg.family == "hybrid":
+        r.update(num_layers=4, attn_every=2, ssm_state=16)
+    if cfg.family == "ssm":
+        r.update(num_layers=2, slstm_every=2)
+    if cfg.encoder_layers:
+        r.update(encoder_layers=2)
+    return dataclasses.replace(cfg, **r)

@@ -1,0 +1,125 @@
+"""Chunked gated linear attention — the shared compute core of Mamba2 (SSD)
+and mLSTM (xLSTM matrix memory).
+
+Both compute, per head,
+    y_t = q_t^T . ( sum_{s<=t}  (prod_{r=s+1..t} a_r)  k_s v_s^T )
+i.e. a linear-attention state S in R^{Dk x Dv} with scalar per-step decay a_r
+(per head). Mamba2: q=C, k=B, v=x-heads, a=exp(dt*A).  mLSTM: a=sigmoid(f)
+forget gate, k scaled by input gate.
+
+The chunked algorithm (chunk L):
+  within-chunk (quadratic, MXU-friendly):  y_intra = ((q k^T) * decay_mask) v
+  chunk states:  S_c = sum_s (a_{s+1..L}) k_s v_s^T, carried with lax.scan
+  inter-chunk:   y_inter_t = (a_{1..t}) q_t^T S_{prev}
+Memory is O(L^2 + Dk*Dv) per head per step — never O(S^2).
+
+`linear_attention_step` is the O(1)-per-token decode form (state carried in
+the serve cache).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_linear_attention(q, k, v, log_a, *, chunk: int = 128,
+                             normalize: bool = False, eps: float = 1e-6,
+                             return_state: bool = False,
+                             unroll: bool = False):
+    """q,k: (B,S,H,Dk); v: (B,S,H,Dv); log_a: (B,S,H) (log decay, <= 0).
+
+    Returns y: (B,S,H,Dv) [f32]. If normalize, divides by the linear-attention
+    normalizer n_t = q_t . (sum decayed k_s) (mLSTM-style, clamped).
+    If return_state, returns (y, (S_final (B,H,Dk,Dv), n_final (B,H,Dk))) for
+    prefill -> decode handoff.
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    L = min(chunk, s)
+    assert s % L == 0, (s, L)
+    nc = s // L
+
+    qc = q.reshape(b, nc, L, h, dk).astype(jnp.float32)
+    kc = k.reshape(b, nc, L, h, dk).astype(jnp.float32)
+    vc = v.reshape(b, nc, L, h, dv).astype(jnp.float32)
+    lac = log_a.reshape(b, nc, L, h).astype(jnp.float32)
+
+    def body(carry, xs):
+        S, n = carry                     # S: (B,H,Dk,Dv); n: (B,H,Dk)
+        qi, ki, vi, lai = xs             # (B,L,H,*)
+        cum = jnp.cumsum(lai, axis=1)    # (B,L,H) log prod a_{1..t}
+        total = cum[:, -1:, :]           # (B,1,H)
+
+        # intra-chunk: decay(i,j) = exp(cum_i - cum_j) for j <= i
+        scores = jnp.einsum("blhd,bmhd->bhlm", qi, ki)
+        ci = jnp.moveaxis(cum, -1, 1)                            # (B,H,L)
+        dm = ci[:, :, :, None] - ci[:, :, None, :]               # (B,H,L,M)
+        causal = jnp.tril(jnp.ones((L, L), bool))
+        dec = jnp.where(causal[None, None], jnp.exp(dm), 0.0)
+        y_intra = jnp.einsum("bhlm,bmhd->blhd", scores * dec, vi)
+
+        # inter-chunk: y += exp(cum_t) q_t . S_prev
+        w = jnp.exp(cum)                                         # (B,L,H)
+        y_inter = jnp.einsum("blhd,bhde->blhe", qi * w[..., None], S)
+        y = y_intra + y_inter
+
+        if normalize:
+            # normalizer: n_t = sum_{s<=t} decay * k_s  (vector), y /= q.n
+            k_dec = jnp.einsum("bhlm,bmhd->blhd", dec, ki)       # intra sums
+            n_vec = k_dec + jnp.einsum("blh,bhd->blhd", w, n)
+            denom = jnp.abs(jnp.einsum("blhd,blhd->blh", qi, n_vec))
+            y = y / jnp.maximum(denom, eps)[..., None]
+
+        # update state: S_new = exp(total) S + sum_s exp(total - cum_s) k v^T
+        w_k = jnp.exp(total - cum)                               # (B,L,H)
+        S_new = jnp.exp(total)[:, 0, :, None, None] * S + jnp.einsum(
+            "blhd,blhe->bhde", ki * w_k[..., None], vi)
+        if normalize:
+            n_upd = jnp.exp(total)[:, 0, :, None] * n + jnp.einsum(
+                "blhd->bhd", ki * w_k[..., None])
+            return (S_new, n_upd), y
+        return (S_new, n), y
+
+    S0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+    n0 = jnp.zeros((b, h, dk), jnp.float32)
+    xs = (
+        jnp.moveaxis(qc, 1, 0), jnp.moveaxis(kc, 1, 0),
+        jnp.moveaxis(vc, 1, 0), jnp.moveaxis(lac, 1, 0),
+    )
+    if unroll:
+        # cost-probe path: python loop at the TRUE chunk size (a single
+        # giant chunk would change the algorithm's flop count — chunked SSD
+        # is linear in S, one chunk is quadratic)
+        carry = (S0, n0)
+        ys_list = []
+        for i in range(nc):
+            xi = jax.tree.map(lambda a: a[i], xs)
+            carry, y = body(carry, xi)
+            ys_list.append(y)
+        (S_f, n_f), ys = carry, jnp.stack(ys_list, 0)
+    else:
+        (S_f, n_f), ys = jax.lax.scan(body, (S0, n0), xs)
+    # ys: (nc, B, L, H, Dv) -> (B, S, H, Dv)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, dv)
+    if return_state:
+        return y, (S_f, n_f)
+    return y
+
+
+def linear_attention_step(state, q, k, v, log_a, *, norm_state=None,
+                          normalize: bool = False, eps: float = 1e-6):
+    """O(1) decode step.
+
+    state: (B,H,Dk,Dv); q,k: (B,H,Dk); v: (B,H,Dv); log_a: (B,H).
+    Returns (y (B,H,Dv), new_state[, new_norm_state]).
+    """
+    a = jnp.exp(log_a.astype(jnp.float32))[..., None, None]
+    state = a * state + jnp.einsum("bhd,bhe->bhde", k.astype(jnp.float32),
+                                   v.astype(jnp.float32))
+    y = jnp.einsum("bhd,bhde->bhe", q.astype(jnp.float32), state)
+    if normalize:
+        ns = a[..., 0] * norm_state + k.astype(jnp.float32)
+        denom = jnp.abs(jnp.einsum("bhd,bhd->bh", q.astype(jnp.float32), ns))
+        y = y / jnp.maximum(denom, eps)[..., None]
+        return y, state, ns
+    return y, state, norm_state

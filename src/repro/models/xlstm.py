@@ -1,0 +1,347 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable via chunked linear
+attention) and sLSTM (scalar memory, true recurrence via lax.scan).
+
+Block layout follows xlstm-125m: `slstm_every`-th blocks are sLSTM, the rest
+mLSTM. d_ff=0 in the assignment: capacity lives in the block up/down
+projections (factor 2 for mLSTM, 4/3 GLU for sLSTM), per the xLSTM paper.
+
+Layers are heterogeneous, so the stack is a python tuple (no layer scan);
+at 12 layers the HLO stays small. mLSTM exponential input gates are clamped
+and the normalizer (normalize=True) keeps magnitudes bounded — the paper's
+m-stabilizer is folded into the normalizer for the chunked form.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.models import common, layers, ssm_common
+from repro.sharding import Annotated
+
+CONV_K = 4
+EXP_CLAMP = 10.0
+
+
+def _mdims(cfg: ModelConfig):
+    di = 2 * cfg.d_model
+    h = cfg.num_heads
+    dh = di // h
+    return di, h, dh
+
+
+def mlstm_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di, h, dh = _mdims(cfg)
+    pt = cfg.param_dtype
+    return {
+        "norm": Annotated((d,), pt, (None,)),
+        "wu": Annotated((d, di), pt, ("embed", "ssm_inner")),
+        "wz": Annotated((d, di), pt, ("embed", "ssm_inner")),
+        "conv": Annotated((CONV_K, di), pt, (None, "ssm_inner")),
+        "wq": Annotated((di, di), pt, ("ssm_inner", None)),
+        "wk": Annotated((di, di), pt, ("ssm_inner", None)),
+        "wv": Annotated((di, di), pt, ("ssm_inner", None)),
+        "wi": Annotated((di, h), pt, ("ssm_inner", None)),
+        "wf": Annotated((di, h), pt, ("ssm_inner", None)),
+        "f_bias": Annotated((h,), pt, (None,)),
+        "out_norm": Annotated((di,), pt, (None,)),
+        "wo": Annotated((di, d), pt, ("ssm_inner", "embed")),
+    }
+
+
+def slstm_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    h = cfg.num_heads
+    dh = d // h
+    pt = cfg.param_dtype
+    fup = (4 * d) // 3
+    return {
+        "norm": Annotated((d,), pt, (None,)),
+        "w_gates": Annotated((d, 4, h, dh), pt, ("embed", None, "heads", None)),
+        "r_gates": Annotated((h, dh, 4, dh), pt, ("heads", None, None, None)),
+        "b_gates": Annotated((4, h, dh), pt, (None, "heads", None)),
+        "out_norm": Annotated((d,), pt, (None,)),
+        "w_up1": Annotated((d, fup), pt, ("embed", "ff")),
+        "w_up2": Annotated((d, fup), pt, ("embed", "ff")),
+        "w_down": Annotated((fup, d), pt, ("ff", "embed")),
+    }
+
+
+def xlstm_defs(cfg: ModelConfig) -> dict:
+    blocks = []
+    for i in range(cfg.num_layers):
+        if cfg.slstm_every and (i % cfg.slstm_every == cfg.slstm_every - 1):
+            blocks.append({"kind_slstm": slstm_defs(cfg)})
+        else:
+            blocks.append({"kind_mlstm": mlstm_defs(cfg)})
+    return {"blocks": tuple(blocks), **common.embed_defs(cfg)}
+
+
+def _is_slstm(block_params) -> bool:
+    return "kind_slstm" in block_params
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def _conv1d(x, kernel):
+    k = kernel.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros(x.shape, jnp.float32)
+    for i in range(k):
+        out = out + xp[:, i : i + x.shape[1], :].astype(jnp.float32) * \
+            kernel[i].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def _mlstm_qkvif(p, u, cfg: ModelConfig):
+    di, h, dh = _mdims(cfg)
+    b, s, _ = u.shape
+    cu = jax.nn.silu(_conv1d(u, p["conv"]).astype(jnp.float32)).astype(u.dtype)
+    q = jnp.einsum("bse,ef->bsf", cu, p["wq"].astype(u.dtype),
+                   preferred_element_type=jnp.float32).astype(u.dtype)
+    k = jnp.einsum("bse,ef->bsf", cu, p["wk"].astype(u.dtype),
+                   preferred_element_type=jnp.float32).astype(u.dtype)
+    v = jnp.einsum("bse,ef->bsf", u, p["wv"].astype(u.dtype),
+                   preferred_element_type=jnp.float32).astype(u.dtype)
+    i_pre = jnp.einsum("bse,eh->bsh", cu, p["wi"].astype(u.dtype),
+                       preferred_element_type=jnp.float32)
+    f_pre = jnp.einsum("bse,eh->bsh", cu, p["wf"].astype(u.dtype),
+                       preferred_element_type=jnp.float32) + \
+        p["f_bias"].astype(jnp.float32)
+    shp = (b, s, h, dh)
+    igate = jnp.exp(jnp.minimum(i_pre, EXP_CLAMP))          # clamped exp gate
+    return (q.reshape(shp), k.reshape(shp), v.reshape(shp), igate,
+            jax.nn.log_sigmoid(f_pre))
+
+
+def mlstm_block(p, x, cfg: ModelConfig, return_state: bool = False):
+    di, h, dh = _mdims(cfg)
+    b, s, d = x.shape
+    hn = layers.rms_norm(x, p["norm"], cfg.norm_eps)
+    u = jnp.einsum("bsd,de->bse", hn, p["wu"].astype(x.dtype),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    z = jnp.einsum("bsd,de->bse", hn, p["wz"].astype(x.dtype),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    q, k, v, igate, log_f = _mlstm_qkvif(p, u, cfg)
+    k = k * (igate[..., None] / jnp.sqrt(dh)).astype(k.dtype)
+    res = ssm_common.chunked_linear_attention(q, k, v, log_f,
+                                              chunk=min(128, s),
+                                              normalize=True,
+                                              return_state=return_state,
+                                              unroll=layers.PROBE_UNROLL)
+    y, state = res if return_state else (res, None)
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = layers.rms_norm(y, p["out_norm"], cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["wo"].astype(x.dtype),
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    if return_state:
+        tail = u[:, -(CONV_K - 1):]
+        if s < CONV_K - 1:
+            tail = jnp.pad(u, ((0, 0), (CONV_K - 1 - s, 0), (0, 0)))
+        return x + out, (tail, state[0], state[1])
+    return x + out
+
+
+def mlstm_decode_step(p, x, cfg: ModelConfig, conv_buf, S, n):
+    """x: (B,1,D); conv_buf: (B,K-1,di); S: (B,H,dh,dh); n: (B,H,dh)."""
+    di, h, dh = _mdims(cfg)
+    b = x.shape[0]
+    hn = layers.rms_norm(x, p["norm"], cfg.norm_eps)
+    u = jnp.einsum("bsd,de->bse", hn, p["wu"].astype(x.dtype),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    z = jnp.einsum("bsd,de->bse", hn, p["wz"].astype(x.dtype),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    seqbuf = jnp.concatenate([conv_buf, u], axis=1)
+    cu = jax.nn.silu(jnp.einsum("bkc,kc->bc", seqbuf.astype(jnp.float32),
+                                p["conv"].astype(jnp.float32)))
+    cu = cu[:, None, :].astype(x.dtype)
+    new_buf = seqbuf[:, 1:]
+
+    q = jnp.einsum("bse,ef->bsf", cu, p["wq"].astype(x.dtype))[:, 0]
+    k = jnp.einsum("bse,ef->bsf", cu, p["wk"].astype(x.dtype))[:, 0]
+    v = jnp.einsum("bse,ef->bsf", u, p["wv"].astype(x.dtype))[:, 0]
+    i_pre = jnp.einsum("bse,eh->bsh", cu, p["wi"].astype(x.dtype))[:, 0]
+    f_pre = jnp.einsum("bse,eh->bsh", cu, p["wf"].astype(x.dtype))[:, 0] + \
+        p["f_bias"].astype(jnp.float32)
+    igate = jnp.exp(jnp.minimum(i_pre.astype(jnp.float32), EXP_CLAMP))
+    shp = (b, h, dh)
+    k = k.reshape(shp) * (igate[..., None] / jnp.sqrt(dh)).astype(k.dtype)
+    y, S, n = ssm_common.linear_attention_step(
+        S, q.reshape(shp), k, v.reshape(shp),
+        jax.nn.log_sigmoid(f_pre.astype(jnp.float32)),
+        norm_state=n, normalize=True)
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = layers.rms_norm(y, p["out_norm"], cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["wo"].astype(x.dtype),
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return x + out, new_buf, S, n
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def _slstm_cell(gates, state):
+    """gates: (B,H,4,dh) pre-activations [z,i,f,o]; state: (c,n,m,h)."""
+    c, n, m, hprev = state
+    zp, ip, fp, op = (gates[:, :, j] for j in range(4))
+    z = jnp.tanh(zp)
+    o = jax.nn.sigmoid(op)
+    m_new = jnp.maximum(fp + m, ip)
+    i = jnp.exp(ip - m_new)
+    f = jnp.exp(fp + m - m_new)
+    c_new = f * c + i * z
+    n_new = f * n + i
+    h_new = o * (c_new / jnp.maximum(n_new, 1e-6))
+    return (c_new, n_new, m_new, h_new)
+
+
+def _slstm_gates(p, x_t, h_prev):
+    """x_t: (B,D); h_prev: (B,H,dh) -> (B,H,4,dh) pre-activations."""
+    wx = jnp.einsum("bd,dghe->bhge", x_t.astype(jnp.float32),
+                    p["w_gates"].astype(jnp.float32))
+    wr = jnp.einsum("bhe,hegf->bhgf", h_prev,
+                    p["r_gates"].astype(jnp.float32))
+    return wx + wr + p["b_gates"].astype(jnp.float32).transpose(1, 0, 2)[None]
+
+
+def slstm_block(p, x, cfg: ModelConfig, return_state: bool = False):
+    b, s, d = x.shape
+    h = cfg.num_heads
+    dh = d // h
+    hn = layers.rms_norm(x, p["norm"], cfg.norm_eps)
+
+    def step(state, x_t):
+        gates = _slstm_gates(p, x_t, state[3])
+        state = _slstm_cell(gates, state)
+        return state, state[3]
+
+    z0 = jnp.zeros((b, h, dh), jnp.float32)
+    m0 = jnp.full((b, h, dh), -jnp.inf, jnp.float32)
+    fstate, hs = jax.lax.scan(step, (z0, z0, m0, z0), jnp.moveaxis(hn, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
+    y = layers.rms_norm(y, p["out_norm"], cfg.norm_eps)
+    u1 = jnp.einsum("bsd,df->bsf", y, p["w_up1"].astype(x.dtype),
+                    preferred_element_type=jnp.float32)
+    u2 = jnp.einsum("bsd,df->bsf", y, p["w_up2"].astype(x.dtype),
+                    preferred_element_type=jnp.float32)
+    g = (jax.nn.gelu(u1) * u2).astype(x.dtype)
+    out = jnp.einsum("bsf,fd->bsd", g, p["w_down"].astype(x.dtype),
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    if return_state:
+        return x + out, fstate
+    return x + out
+
+
+def slstm_decode_step(p, x, cfg: ModelConfig, state):
+    b = x.shape[0]
+    hn = layers.rms_norm(x, p["norm"], cfg.norm_eps)
+    gates = _slstm_gates(p, hn[:, 0], state[3])
+    state = _slstm_cell(gates, state)
+    d = x.shape[-1]
+    y = state[3].reshape(b, 1, d).astype(x.dtype)
+    y = layers.rms_norm(y, p["out_norm"], cfg.norm_eps)
+    u1 = jnp.einsum("bsd,df->bsf", y, p["w_up1"].astype(x.dtype),
+                    preferred_element_type=jnp.float32)
+    u2 = jnp.einsum("bsd,df->bsf", y, p["w_up2"].astype(x.dtype),
+                    preferred_element_type=jnp.float32)
+    g = (jax.nn.gelu(u1) * u2).astype(x.dtype)
+    out = jnp.einsum("bsf,fd->bsd", g, p["w_down"].astype(x.dtype),
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return x + out, state
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+
+def xlstm_forward(params, tokens, cfg: ModelConfig, parallel=None):
+    parallel = parallel or ParallelConfig()
+    x = common.embed_tokens(params, tokens, cfg)
+    for bp in params["blocks"]:
+        if _is_slstm(bp):
+            fn = lambda x, p=bp["kind_slstm"]: slstm_block(p, x, cfg)
+        else:
+            fn = lambda x, p=bp["kind_mlstm"]: mlstm_block(p, x, cfg)
+        x = jax.checkpoint(fn)(x) if parallel.remat != "none" else fn(x)
+    x = layers.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return common.lm_head(params, x, cfg), jnp.float32(0.0)
+
+
+def xlstm_prefill(params, tokens, cfg: ModelConfig, parallel=None):
+    """Prefill -> (last-token logits, cache per xlstm_cache_defs)."""
+    parallel = parallel or ParallelConfig()
+    b, s = tokens.shape
+    x = common.embed_tokens(params, tokens, cfg)
+    new_blocks = []
+    for bp in params["blocks"]:
+        if _is_slstm(bp):
+            x, st = slstm_block(bp["kind_slstm"], x, cfg, return_state=True)
+            # replace -inf stabilizer with a large negative finite value so
+            # the decode cache stays IEEE-clean
+            m = jnp.maximum(st[2], -1e30)
+            new_blocks.append({"slstm": {
+                "c": st[0], "n": st[1], "m": m, "h": st[3]}})
+        else:
+            x, (conv, S, n) = mlstm_block(bp["kind_mlstm"], x, cfg,
+                                          return_state=True)
+            new_blocks.append({"mlstm": {
+                "conv": conv.astype(jnp.dtype(cfg.dtype)), "S": S, "n": n}})
+    x = layers.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = common.lm_head(params, x[:, -1:], cfg)
+    cache = {"blocks": tuple(new_blocks),
+             "length": jnp.full((b,), s, jnp.int32)}
+    return logits, cache
+
+
+def xlstm_cache_defs(cfg: ModelConfig, batch: int) -> dict:
+    di, h, dh = _mdims(cfg)
+    dhs = cfg.d_model // cfg.num_heads
+    blocks = []
+    for i in range(cfg.num_layers):
+        if cfg.slstm_every and (i % cfg.slstm_every == cfg.slstm_every - 1):
+            st = Annotated((batch, cfg.num_heads, dhs), "float32",
+                           ("batch", "heads", None))
+            blocks.append({"slstm": {"c": st, "n": st, "m": st, "h": st}})
+        else:
+            blocks.append({"mlstm": {
+                "conv": Annotated((batch, CONV_K - 1, di), cfg.dtype,
+                                  ("batch", None, "ssm_inner")),
+                "S": Annotated((batch, h, dh, dh), "float32",
+                               ("batch", "heads", None, None)),
+                "n": Annotated((batch, h, dh), "float32",
+                               ("batch", "heads", None)),
+            }})
+    return {"blocks": tuple(blocks),
+            "length": Annotated((batch,), "int32", ("batch",))}
+
+
+def xlstm_decode_step(params, cache, tokens, cfg: ModelConfig,
+                      unroll: bool = False):
+    del unroll  # already a python loop over heterogeneous blocks
+    x = common.embed_tokens(params, tokens, cfg)
+    new_blocks = []
+    for bp, bc in zip(params["blocks"], cache["blocks"]):
+        if _is_slstm(bp):
+            st = bc["slstm"]
+            state = (st["c"], st["n"], st["m"], st["h"])
+            x, state = slstm_decode_step(bp["kind_slstm"], x, cfg, state)
+            new_blocks.append({"slstm": {
+                "c": state[0], "n": state[1], "m": state[2], "h": state[3]}})
+        else:
+            st = bc["mlstm"]
+            x, conv, S, n = mlstm_decode_step(
+                bp["kind_mlstm"], x, cfg, st["conv"], st["S"], st["n"])
+            new_blocks.append({"mlstm": {"conv": conv, "S": S, "n": n}})
+    x = layers.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = common.lm_head(params, x, cfg)
+    return logits, {"blocks": tuple(new_blocks),
+                    "length": cache["length"] + 1}

@@ -1,0 +1,134 @@
+"""Sharded optimizers (functional, optax-free — offline container).
+
+Optimizer moments live in the SAME sharding as their parameter (the DPMR
+rule: state is co-located with the parameter's owner shard; updateParameters
+never moves data). Moment dtype comes from ModelConfig.opt_dtype so very
+large archs (llama3-405b, mixtral) can run bf16 moments to fit HBM.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.sharding import Annotated
+
+
+class Optimizer(NamedTuple):
+    init_defs: Callable      # (param_defs, opt_dtype) -> state defs tree
+    init: Callable           # (params, opt_dtype) -> state tree
+    update: Callable         # (grads, state, params, lr, cfg) -> (new_params, new_state)
+
+
+def _zeros_like_defs(param_defs, opt_dtype):
+    return jax.tree.map(
+        lambda a: Annotated(a.shape, opt_dtype, a.logical), param_defs,
+        is_leaf=lambda x: isinstance(x, Annotated))
+
+
+def _zeros_like(params, opt_dtype):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, opt_dtype), params)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+# --- SGD / momentum ---------------------------------------------------------
+
+
+def _sgd_update(grads, state, params, lr, cfg: TrainConfig):
+    new = jax.tree.map(lambda p, g: (p.astype(jnp.float32)
+                                     - lr * g.astype(jnp.float32)
+                                     ).astype(p.dtype), params, grads)
+    return new, state
+
+
+def _momentum_init_defs(pd, od):
+    return {"mu": _zeros_like_defs(pd, od)}
+
+
+def _momentum_update(grads, state, params, lr, cfg: TrainConfig):
+    mu = jax.tree.map(
+        lambda m, g: (cfg.beta1 * m.astype(jnp.float32)
+                      + g.astype(jnp.float32)).astype(m.dtype),
+        state["mu"], grads)
+    new = jax.tree.map(lambda p, m: (p.astype(jnp.float32)
+                                     - lr * m.astype(jnp.float32)
+                                     ).astype(p.dtype), params, mu)
+    return new, {"mu": mu}
+
+
+# --- Adam / AdamW -----------------------------------------------------------
+
+
+def _adam_init_defs(pd, od):
+    return {"m": _zeros_like_defs(pd, od), "v": _zeros_like_defs(pd, od),
+            "count": Annotated((), "int32", ())}
+
+
+def _adam_init(params, od):
+    return {"m": _zeros_like(params, od), "v": _zeros_like(params, od),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def _adamw_update(grads, state, params, lr, cfg: TrainConfig,
+                  weight_decay: Optional[float] = None):
+    wd = cfg.weight_decay if weight_decay is None else weight_decay
+    count = state["count"] + 1
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - b1 ** count.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def moments(g, m, v):
+        g32 = g.astype(jnp.float32)
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+        return m32, v32
+
+    def upd_p(p, g, m, v):
+        m32, v32 = moments(g, m, v)
+        step = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + 1e-8)
+        p32 = p.astype(jnp.float32)
+        if wd:
+            step = step + wd * p32
+        return (p32 - lr * step).astype(p.dtype)
+
+    # separate maps (params trees may contain tuples as structure, so we
+    # cannot smuggle (p, m, v) tuples through as leaves); XLA CSEs the
+    # recomputed moments inside jit.
+    new_p = jax.tree.map(upd_p, params, grads, state["m"], state["v"])
+    new_m = jax.tree.map(lambda g, m, v: moments(g, m, v)[0].astype(m.dtype),
+                         grads, state["m"], state["v"])
+    new_v = jax.tree.map(lambda g, m, v: moments(g, m, v)[1].astype(v.dtype),
+                         grads, state["m"], state["v"])
+    return new_p, {"m": new_m, "v": new_v, "count": count}
+
+
+def _adam_update(grads, state, params, lr, cfg):
+    return _adamw_update(grads, state, params, lr, cfg, weight_decay=0.0)
+
+
+OPTIMIZERS = {
+    "sgd": Optimizer(lambda pd, od: {}, lambda p, od: {}, _sgd_update),
+    "momentum": Optimizer(_momentum_init_defs,
+                          lambda p, od: {"mu": _zeros_like(p, od)},
+                          _momentum_update),
+    "adam": Optimizer(_adam_init_defs, _adam_init, _adam_update),
+    "adamw": Optimizer(_adam_init_defs, _adam_init, _adamw_update),
+}
+
+
+def get_optimizer(name: str) -> Optimizer:
+    return OPTIMIZERS[name]

@@ -1,0 +1,51 @@
+"""Elastic rescaling: move a training/DPMR state between meshes.
+
+Dense state (params/opt): checkpoints hold full logical arrays, so restoring
+under the new mesh's shardings is a device_put (ckpt/checkpointer.py). This
+module adds the DPMR sparse-face case, where the parameter table's PADDED
+length depends on the shard count (F rounded up to a multiple of P): growing
+or shrinking the mesh re-pads the table and re-shards.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import DPMRConfig
+from repro.core import dpmr
+
+
+def reshard_tree(tree, shardings):
+    """device_put every leaf under the new sharding (full logical arrays)."""
+    return jax.tree.map(jax.device_put, tree, shardings)
+
+
+def reshard_dpmr_state(state: dpmr.DPMRState, cfg: DPMRConfig, new_mesh
+                       ) -> dpmr.DPMRState:
+    """Re-pad + re-shard a DPMRState for `new_mesh` (elastic scale up/down)."""
+    f_new = dpmr.padded_features(cfg, new_mesh)
+    axes = tuple(new_mesh.axis_names)
+    shard = NamedSharding(new_mesh, P(axes))
+    rep = NamedSharding(new_mesh, P())
+
+    def repad(x):
+        x = jax.device_get(x)
+        if x.shape[0] < f_new:
+            x = jnp.pad(x, (0, f_new - x.shape[0]))
+        elif x.shape[0] > f_new:
+            # shrinking is only valid if the tail is padding (beyond
+            # cfg.num_features); assert to avoid silent weight loss
+            assert x.shape[0] - (x.shape[0] - f_new) >= cfg.num_features, (
+                "cannot shrink below the real feature space")
+            x = x[:f_new]
+        return x
+
+    return dpmr.DPMRState(
+        cold=jax.device_put(repad(state.cold), shard),
+        hot=jax.device_put(jax.device_get(state.hot), rep),
+        hot_ids=jax.device_put(jax.device_get(state.hot_ids), rep),
+        cold_acc=jax.device_put(repad(state.cold_acc), shard),
+        hot_acc=jax.device_put(jax.device_get(state.hot_acc), rep),
+        step=jax.device_put(jax.device_get(state.step), rep),
+    )

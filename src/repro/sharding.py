@@ -1,0 +1,167 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style, divisibility-aware).
+
+Model code annotates every parameter with *logical* axis names; at jit time we
+translate them to PartitionSpecs for the concrete mesh, dropping any mapping
+that does not divide the dimension (e.g. 8 kv heads cannot shard over a
+16-way `model` axis -> replicated).
+
+The DPMR dense face is expressed here: the `embed`/`mlp_embed` logical axes
+map to the FSDP (`data`) axis — parameters are sharded across the same devices
+that hold the data, exactly the paper's "parameters distributed like samples".
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisNames = Tuple[Optional[str], ...]
+
+# logical axis -> preference-ordered mesh axes
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),       # data parallel
+    "seq": (),                      # replicated by default (SP handled explicitly)
+    "embed": ("data",),             # FSDP / dense-DPMR shard axis
+    "mlp_embed": ("data",),
+    "vocab": ("model",),            # sparse-face owner axis
+    "heads": ("model",),            # tensor parallel
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "ff": ("model",),
+    "experts": ("model",),          # expert parallel
+    "ssm_heads": ("model",),
+    "ssm_inner": ("model",),
+    "ssm_state": (),
+    "layers": (),                   # scan dim, never sharded
+    "stack": (),
+    "feature_shard": ("model",),    # DPMR sparse face: feature-owner axis
+    "kv_seq": ("model",),           # cache slots when kv_heads can't shard
+}
+
+
+def mesh_axis_size(mesh: Mesh, names: Union[str, Sequence[str], None]) -> int:
+    if names is None:
+        return 1
+    if isinstance(names, str):
+        names = (names,)
+    size = 1
+    for n in names:
+        size *= int(mesh.shape[n])
+    return size
+
+
+def logical_to_spec(
+    logical: AxisNames,
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: Optional[dict] = None,
+) -> P:
+    """Translate logical axis names to a PartitionSpec for `mesh`.
+
+    Each dim maps to the first rule-axis (or tuple prefix of rule-axes) that
+    (a) exists in the mesh, (b) divides the dim size and (c) is not already
+    used by another dim of this array.
+    """
+    rules = rules or DEFAULT_RULES
+    used: set = set()
+    out = []
+    for dim, name in zip(shape, logical):
+        if name is None:
+            out.append(None)
+            continue
+        candidates = rules.get(name, ())
+        picked: list = []
+        for ax in candidates:
+            if ax not in mesh.axis_names or ax in used:
+                continue
+            trial = picked + [ax]
+            if dim % mesh_axis_size(mesh, trial) == 0:
+                picked = trial
+        if picked:
+            used.update(picked)
+            out.append(tuple(picked) if len(picked) > 1 else picked[0])
+        else:
+            out.append(None)
+    return P(*out)
+
+
+class Annotated:
+    """A (shape, dtype, logical_axes) parameter declaration."""
+
+    __slots__ = ("shape", "dtype", "logical")
+
+    def __init__(self, shape, dtype, logical):
+        assert len(shape) == len(logical), (shape, logical)
+        self.shape = tuple(int(s) for s in shape)
+        self.dtype = dtype
+        self.logical = tuple(logical)
+
+    def spec(self, mesh: Mesh, rules=None) -> P:
+        return logical_to_spec(self.logical, self.shape, mesh, rules)
+
+    def sds(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+    def __repr__(self):
+        return f"Annotated({self.shape}, {self.dtype}, {self.logical})"
+
+
+def tree_specs(defs, mesh: Mesh, rules=None):
+    """Pytree of Annotated -> pytree of PartitionSpec."""
+    return jax.tree.map(
+        lambda a: a.spec(mesh, rules), defs, is_leaf=lambda x: isinstance(x, Annotated)
+    )
+
+
+def tree_shardings(defs, mesh: Mesh, rules=None):
+    return jax.tree.map(
+        lambda a: NamedSharding(mesh, a.spec(mesh, rules)),
+        defs,
+        is_leaf=lambda x: isinstance(x, Annotated),
+    )
+
+
+def tree_sds(defs):
+    return jax.tree.map(
+        lambda a: a.sds(), defs, is_leaf=lambda x: isinstance(x, Annotated)
+    )
+
+
+def init_from_defs(defs, key, scale_fn=None):
+    """Materialize parameters from Annotated defs with fan-in scaled normals.
+
+    `scale_fn(path, ann) -> float stddev` overrides the default 1/sqrt(fan_in).
+    """
+    import jax.numpy as jnp
+
+    leaves, treedef = jax.tree.flatten(
+        defs, is_leaf=lambda x: isinstance(x, Annotated)
+    )
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, ann in zip(keys, leaves):
+        if scale_fn is not None:
+            std = scale_fn(ann)
+        else:
+            fan_in = ann.shape[-2] if len(ann.shape) >= 2 else max(ann.shape[-1], 1)
+            std = 1.0 / np.sqrt(max(fan_in, 1))
+        if np.issubdtype(np.dtype(ann.dtype), np.floating):
+            if len(ann.shape) == 1 or "norm" in str(ann.logical):
+                val = jnp.ones(ann.shape, ann.dtype)
+            else:
+                val = (jax.random.normal(k, ann.shape, jnp.float32) * std).astype(
+                    ann.dtype
+                )
+        else:
+            val = jnp.zeros(ann.shape, ann.dtype)
+        out.append(val)
+    return jax.tree.unflatten(treedef, out)
+
+
+def batch_spec(mesh: Mesh, *trailing) -> P:
+    """PartitionSpec with the batch dim over all DP axes present in mesh."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    lead = dp if len(dp) > 1 else (dp[0] if dp else None)
+    return P(lead, *trailing)

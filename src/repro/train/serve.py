@@ -1,0 +1,39 @@
+"""Serve-step builders: prefill and decode with sharded KV/state caches."""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ParallelConfig
+
+
+def make_prefill_step(spec, cfg: ModelConfig,
+                      parallel: ParallelConfig) -> Callable:
+    def prefill_step(params, batch):
+        return spec.prefill(params, batch, cfg, parallel)
+
+    return prefill_step
+
+
+def make_decode_step(spec, cfg: ModelConfig) -> Callable:
+    def decode_step(params, cache, tokens):
+        return spec.decode_step(params, cache, tokens, cfg)
+
+    return decode_step
+
+
+def greedy_decode(spec, cfg: ModelConfig, params, batch, steps: int,
+                  parallel=None):
+    """Prefill + greedy decode loop (host loop; serving example driver)."""
+    decode = jax.jit(make_decode_step(spec, cfg))
+    logits, cache = jax.jit(make_prefill_step(spec, cfg, parallel))(
+        params, batch)
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    out = [tok]
+    for _ in range(steps - 1):
+        logits, cache = decode(params, cache, tok)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

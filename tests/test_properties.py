@@ -1,0 +1,152 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hot_sharding, sparse
+from repro.kernels import ops
+from repro.optim import compression
+
+SET = dict(max_examples=25, deadline=None)
+
+
+@st.composite
+def id_arrays(draw, max_n=96, max_f=96):
+    n = draw(st.integers(4, max_n))
+    f = draw(st.integers(8, max_f))
+    ids = draw(st.lists(st.integers(-1, f - 1), min_size=n, max_size=n))
+    return np.asarray(ids, np.int32), f
+
+
+@given(id_arrays(), st.integers(1, 4))
+@settings(**SET)
+def test_route_roundtrip_identity(ids_f, logp):
+    """distributeParameters then restoreDocuments is the identity lookup
+    for ANY id multiset, for any shard count, when capacity suffices."""
+    ids, f = ids_f
+    p = 2 ** logp
+    f = -(-f // p) * p
+    block = f // p
+    cap = int(ids.size)                       # capacity always sufficient
+    r = sparse.route_build(jnp.asarray(ids), p, block, cap)
+    assert int(r.overflow) == 0
+    table = np.arange(1, f + 1, dtype=np.float32)  # distinct values
+    req = np.asarray(r.req_ids)
+    resp = np.zeros((p, cap), np.float32)
+    for o in range(p):
+        resp[o] = np.where(req[o] >= 0, table[np.clip(req[o], 0, f - 1)], 0)
+    vals = np.asarray(sparse.route_return(r, jnp.asarray(resp)))
+    expect = np.where(ids >= 0, table[np.clip(ids, 0, f - 1)], 0)
+    np.testing.assert_allclose(vals, expect)
+
+
+@given(id_arrays(), st.integers(1, 3))
+@settings(**SET)
+def test_grad_conservation(ids_f, logp):
+    """The reduce shuffle conserves total gradient mass per feature."""
+    ids, f = ids_f
+    p = 2 ** logp
+    f = -(-f // p) * p
+    block = f // p
+    rng = np.random.default_rng(0)
+    grads = rng.normal(size=ids.shape).astype(np.float32)
+    r = sparse.route_build(jnp.asarray(ids), p, block, int(ids.size))
+    send = np.asarray(sparse.combine_grads(r, jnp.asarray(grads)))
+    # total mass (valid slots only) is conserved through the combiner
+    np.testing.assert_allclose(send.sum(), grads[ids >= 0].sum(), atol=1e-4)
+
+
+@given(st.integers(2, 6), st.integers(10, 200))
+@settings(**SET)
+def test_segment_sum_mass_conservation(nruns, n):
+    rng = np.random.default_rng(nruns * n)
+    ids = np.sort(rng.integers(0, nruns, size=n)).astype(np.int32)
+    g = rng.normal(size=n).astype(np.float32)
+    out = ops.segment_sum_sorted(jnp.asarray(ids), jnp.asarray(g),
+                                 impl="pallas_interpret", block=32)
+    np.testing.assert_allclose(float(jnp.sum(out)), g.sum(), atol=1e-4)
+    # one emission per distinct id
+    assert int(jnp.sum(out != 0)) <= nruns
+
+
+@given(st.integers(0, 2**31 - 2), st.integers(1, 64))
+@settings(**SET)
+def test_hot_split_partition(seed, max_hot):
+    """hot + cold is a partition: every valid id goes to exactly one side."""
+    rng = np.random.default_rng(seed)
+    ids = rng.integers(-1, 1000, size=64).astype(np.int32)
+    counts = hot_sharding.feature_counts(jnp.asarray(ids), 1000)
+    hot = hot_sharding.select_hot(counts, 0.01, max_hot)
+    slot, is_hot, cold = hot_sharding.split_hot(jnp.asarray(ids), hot)
+    is_hot = np.asarray(is_hot)
+    cold = np.asarray(cold)
+    valid = ids >= 0
+    assert np.all((cold[valid] >= 0) != is_hot[valid])
+    assert np.all(cold[~valid] == -1)
+    # hot slots decode back to the original id
+    hot_np = np.asarray(hot)
+    sl = np.asarray(slot)
+    assert np.all(hot_np[sl[is_hot]] == ids[is_hot])
+
+
+@given(st.integers(0, 10_000), st.integers(1, 8))
+@settings(**SET)
+def test_compression_error_feedback_bounded(seed, blocks):
+    """Quantization error never exceeds half a quant step per element, and
+    error feedback keeps the CUMULATIVE error bounded over steps."""
+    rng = np.random.default_rng(seed)
+    n = blocks * 64
+    g = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    err = jnp.zeros_like(g)
+    total_applied = jnp.zeros_like(g)
+    total_true = jnp.zeros_like(g)
+    for _ in range(4):
+        q, scale = compression._quantize(
+            jnp.pad(g + err, (0, (-n) % compression.BLOCK)))
+        deq = compression._dequantize(q, scale, n)
+        new_err = g + err - deq
+        total_applied = total_applied + deq
+        total_true = total_true + g
+        err = new_err
+    # with error feedback, cumulative applied = cumulative true - last error
+    np.testing.assert_allclose(np.asarray(total_applied + err),
+                               np.asarray(total_true), rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(0, 1000))
+@settings(**SET)
+def test_cross_entropy_matches_numpy(seed):
+    from repro.models.common import cross_entropy
+
+    rng = np.random.default_rng(seed)
+    logits = rng.normal(size=(2, 5, 11)).astype(np.float32)
+    labels = rng.integers(0, 11, size=(2, 5)).astype(np.int32)
+    got = float(cross_entropy(jnp.asarray(logits), jnp.asarray(labels)))
+    # numpy oracle
+    e = np.exp(logits - logits.max(-1, keepdims=True))
+    p = e / e.sum(-1, keepdims=True)
+    nll = -np.log(np.take_along_axis(p, labels[..., None], -1))[..., 0]
+    np.testing.assert_allclose(got, nll.mean(), rtol=1e-5)
+
+
+@given(st.sampled_from(["train_4k", "prefill_32k", "decode_32k"]),
+       st.sampled_from(["granite-8b", "mixtral-8x22b", "xlstm-125m"]))
+@settings(max_examples=9, deadline=None)
+def test_batch_defs_consistent(shape_name, arch):
+    """Input specs: batch dims always equal the shape's global batch."""
+    from repro.configs import SHAPES
+    from repro.models import registry
+    from repro.sharding import Annotated
+
+    spec = registry.get_spec(arch)
+    shape = SHAPES[shape_name]
+    defs = registry.batch_defs(spec, shape)
+    toks = defs["tokens"] if "tokens" in defs else defs["cache"]
+    leaves = jax.tree.leaves(
+        defs, is_leaf=lambda x: isinstance(x, Annotated))
+    assert all(isinstance(l, Annotated) for l in leaves)
+    if shape.kind != "decode":
+        assert defs["tokens"].shape == (shape.global_batch, shape.seq_len)
+    else:
+        assert defs["tokens"].shape == (shape.global_batch, 1)
