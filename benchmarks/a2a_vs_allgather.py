@@ -1,49 +1,56 @@
 """The paper's central efficiency claim, quantified: distributing parameters
-BY SHUFFLE (a2a of requested rows) vs SHIPPING THE TABLE (all-gather).
+BY SHUFFLE (a2a of requested rows) vs SHIPPING THE TABLE (all-gather), plus
+the psum_scatter hybrid, using each registered strategy's own wire model.
 
-Per device per step:
-  a2a:        3 * P * cap * 4 bytes          (independent of |F|!)
-  all-gather: |F| * 4 * (P-1)/P bytes        (grows with the feature space)
+Per device per step (forward + reduce collectives both counted; the seed
+version of this table counted only allgather's forward table movement, so
+its ag/a2a ratios were ~2x smaller):
+  a2a:          3 * P * cap * 4 bytes        (independent of |F|!)
+  allgather:    ~ 2 * |F| * 4 bytes          (grows with the feature space)
+  psum_scatter: 2 * P * cap * 4 + |F| * 4    (sparse fwd, dense reduce)
 
 This is exactly why DPMR scales to the paper's 50B-feature regime where a
-parameter-server-free broadcast cannot. Both strategies are implemented in
-core/dpmr.py and verified to produce identical parameters
-(tests/test_dpmr.py::test_a2a_equals_allgather); here we sweep |F|.
-
-Wire-byte model cross-checked against the engine's own buffers (the a2a
-buffers ARE (P, cap) f32; the all-gather IS the (F,) table).
+parameter-server-free broadcast cannot. All strategies are implemented in
+repro/api/strategies.py and verified to produce identical parameters
+(tests/test_dpmr.py::test_strategies_agree); here we sweep |F| and query
+each strategy's `bytes_per_device` cost model — the same buffer math the
+engine executes ((P, cap) f32 a2a buffers; the (F,) table).
 """
 from __future__ import annotations
 
+from repro.api import get_strategy, list_strategies
+from repro.api.strategies import StrategyContext
 from repro.configs.base import DPMRConfig
 from repro.core import dpmr
-from repro.launch.mesh import make_host_mesh
 
 
-def run(p: int = 256, batch: int = 1 << 16, k: int = 64):
+def run(p: int = 256, batch: int = 1 << 16, k: int = 64,
+        strategies=("a2a", "allgather", "psum_scatter")):
     rows = []
     for logf in (20, 24, 27, 30, 33):
         f = 1 << logf
         cfg = DPMRConfig(num_features=f, max_features_per_sample=k)
-        b_loc = batch // p
-        n = b_loc * k
-        mean = max(1, n // p)
-        cap = min(n, max(16, -(-int(4.0 * mean) // 8) * 8))
-        a2a = 3 * p * cap * 4
-        ag = (f // p) * 4 * (p - 1)      # per-device receive of the table
-        rows.append({"features": f, "a2a_bytes_per_dev": a2a,
-                     "allgather_bytes_per_dev": ag,
-                     "ratio": ag / a2a})
+        cap = dpmr.capacity_for_shards(cfg, batch // p, p)
+        ctx = StrategyContext(axes=(), num_shards=p,
+                              block_size=-(-f // p), capacity=cap)
+        row = {"features": f}
+        for name in strategies:
+            row[name] = get_strategy(name).bytes_per_device(ctx)
+        if "a2a" in row and "allgather" in row:
+            row["ratio"] = row["allgather"] / row["a2a"]
+        rows.append(row)
     return rows
 
 
 def main():
-    rows = run()
-    print(f"{'|F|':>12s} {'a2a B/dev':>12s} {'allgather B/dev':>16s} "
-          f"{'ag/a2a':>9s}")
+    names = ("a2a", "allgather", "psum_scatter")
+    rows = run(strategies=names)
+    hdr = f"{'|F|':>12s}" + "".join(f" {n + ' B/dev':>18s}" for n in names)
+    print(hdr + f" {'ag/a2a':>9s}")
     for r in rows:
-        print(f"{r['features']:>12.3e} {r['a2a_bytes_per_dev']:>12.3e} "
-              f"{r['allgather_bytes_per_dev']:>16.3e} {r['ratio']:>9.1f}")
+        line = f"{r['features']:>12.3e}"
+        line += "".join(f" {r[n]:>18.3e}" for n in names)
+        print(line + f" {r.get('ratio', float('nan')):>9.1f}")
     return rows
 
 

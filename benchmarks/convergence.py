@@ -6,39 +6,33 @@ biased toward the majority class, iteration 2 the refinement). We reproduce
 the same curve shape on the synthetic Zipf corpus: majority class first,
 minority class catching up, both converging toward the Bayes ceiling of the
 generator. Reported: cate+1, cate-1 and avg for P, R, F per iteration —
-exactly the paper's panels.
+exactly the paper's panels. Runs through `DPMREngine`; run()'s
+`distribution` arg selects any registered strategy.
 """
 from __future__ import annotations
 
-import jax
-
+from repro.api import DPMREngine, hot_ids_from_corpus
 from repro.configs.base import DPMRConfig
-from repro.core import sparse_lr
 from repro.data import sparse_corpus
 from repro.launch.mesh import make_host_mesh
 
 
 def run(iterations: int = 8, optimizer: str = "adagrad", lr: float = 2.0,
-        features: int = 1 << 14):
+        features: int = 1 << 14, distribution: str = "a2a"):
     spec = sparse_corpus.CorpusSpec(num_features=features,
                                     features_per_sample=32,
                                     signal_features=512, seed=0)
     cfg = DPMRConfig(num_features=features, max_features_per_sample=32,
                      iterations=iterations, learning_rate=lr,
-                     max_hot=64, optimizer=optimizer)
+                     max_hot=64, optimizer=optimizer,
+                     distribution=distribution)
     mesh = make_host_mesh(1, 1)
     train = lambda: sparse_corpus.batches(spec, 512, 8)
     test = list(sparse_corpus.batches(spec, 512, 54, start=50))
-    hot = sparse_lr.hot_ids_from_corpus(cfg, train(), mesh)
-    history = []
+    hot = hot_ids_from_corpus(cfg, train(), mesh)
 
-    def ev(state, fns):
-        return sparse_lr.evaluate(state, fns, test, mesh)
-
-    with jax.set_mesh(mesh):
-        out = sparse_lr.dpmr_train(cfg, mesh, train, 512, hot_ids=hot,
-                                   eval_fn=ev)
-    return out["history"]
+    engine = DPMREngine(cfg, mesh, hot_ids=hot)
+    return engine.fit(train, eval_fn=lambda e: e.evaluate(test))
 
 
 def main():

@@ -11,6 +11,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import get_strategy
+from repro.api.strategies import StrategyContext
 from repro.core import hot_sharding, sparse
 
 
@@ -38,7 +40,9 @@ def run(f: int = 1 << 16, p: int = 64, n: int = 1 << 15,
             cold, n_hot = ids, 0
         r = sparse.route_build(cold, p, block, cap)
         imb = float(hot_sharding.load_imbalance(cold, p, block))
-        a2a_bytes = 3 * p * cap * 4          # request + response + grads
+        ctx = StrategyContext(axes=(), num_shards=p, block_size=block,
+                              capacity=cap)
+        a2a_bytes = get_strategy("a2a").bytes_per_device(ctx)
         rows.append({"max_hot": max_hot, "hot_hits": n_hot,
                      "overflow": int(r.overflow), "imbalance": imb,
                      "a2a_bytes": a2a_bytes})

@@ -54,7 +54,22 @@ def compare(arch: str, shape: str, tags):
     return out
 
 
-if __name__ == "__main__":
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="",
+                    help="single cell: compare this arch (with --shape)")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--tags", nargs="*", default=["cp"])
+    args = ap.parse_args()
+    if args.arch:
+        compare(args.arch, args.shape, args.tags)
+        return
     compare("llama3-405b", "train_4k", ["cp", "cp_mb8"])
     compare("phi3.5-moe-42b-a6.6b", "train_4k", ["cp", "cp_g256"])
     compare("whisper-small", "train_4k", ["cp", "cp_mb4"])
+
+
+if __name__ == "__main__":
+    main()

@@ -68,21 +68,18 @@ def bench_a2a_vs_allgather():
 
 def bench_dpmr_step():
     """Wall time of one DPMR SGD step (CPU, relative use only)."""
+    from repro.api import DPMREngine
     from repro.configs.base import DPMRConfig
-    from repro.core import dpmr
     from repro.data import sparse_corpus
     from repro.launch.mesh import make_host_mesh
 
     spec = sparse_corpus.CorpusSpec(num_features=1 << 16,
                                     features_per_sample=32)
     cfg = DPMRConfig(num_features=1 << 16, max_features_per_sample=32)
-    mesh = make_host_mesh(1, 1)
-    with jax.set_mesh(mesh):
-        fns = dpmr.make_step_fns(cfg, mesh, 1024)
-        state = dpmr.init_state(cfg, mesh)
-        b = {k: jnp.asarray(v) for k, v in
-             sparse_corpus.make_batch(spec, 1024, 0).items()}
-        us = _time_us(lambda: fns["train_step"](state, b))
+    engine = DPMREngine(cfg, make_host_mesh(1, 1))
+    fns = engine.step_fns(1024)
+    b = engine.put_batch(sparse_corpus.make_batch(spec, 1024, 0))
+    us = _time_us(lambda: fns.train_step(engine.state, b))
     print(f"dpmr_sgd_step_b1024,{us:.0f},tokens_per_s="
           f"{1024 / (us / 1e6):.0f}")
 
@@ -120,12 +117,14 @@ def bench_train_step():
     from repro.models import registry
     from repro.train import trainer
 
+    from repro import compat
+
     mesh = make_host_mesh(1, 1)
     cfg = registry.smoke_config("granite-8b")
     spec = registry.get_spec("granite-8b")
     tc = TrainConfig()
     pc = ParallelConfig()
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         state = trainer.init_state(spec, cfg, tc, pc, jax.random.PRNGKey(0))
         step = jax.jit(trainer.make_train_step(spec, cfg, tc, pc, mesh))
         ds = LMDataset(LMDataConfig(cfg.vocab_size, 64, 8))

@@ -28,9 +28,7 @@ def stage_costs(cfg: DPMRConfig, global_batch: int, p: int,
     b_loc = global_batch // p
     n = b_loc * k                       # feature slots per device
     f_loc = -(-cfg.num_features // p)
-    # capacity per (src,dst) pair
-    mean = max(1, n // p)
-    cap = min(n, max(16, -(-int(cap_factor * mean) // 8) * 8))
+    cap = dpmr.capacity_for_shards(cfg, b_loc, p, cap_factor)
 
     stages = {
         # invertDocuments: sort-by-feature = O(n log n) compare ops, local

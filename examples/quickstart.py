@@ -1,12 +1,11 @@
 """Quickstart: train + classify distributed sparse logistic regression with
-Distributed Parameter Map-Reduce (the paper's Algorithm 8 + 9) in ~30 lines.
+Distributed Parameter Map-Reduce (the paper's Algorithm 8 + 9) through the
+typed `DPMREngine` façade, in ~25 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import jax
-
+from repro.api import DPMREngine, hot_ids_from_corpus, list_strategies
 from repro.configs.base import DPMRConfig
-from repro.core import sparse_lr
 from repro.data import sparse_corpus
 from repro.launch.mesh import make_host_mesh
 
@@ -16,22 +15,22 @@ corpus = sparse_corpus.CorpusSpec(num_features=1 << 14,
                                   signal_features=512)
 cfg = DPMRConfig(num_features=1 << 14, max_features_per_sample=32,
                  iterations=6, learning_rate=2.0, max_hot=64,
-                 optimizer="adagrad")
+                 optimizer="adagrad")     # distribution="a2a" is the default;
+#                                          any name in list_strategies() works
 
 mesh = make_host_mesh(1, 1)   # every device = one DPMR node (samples+params)
 train_batches = lambda: sparse_corpus.batches(corpus, 512, 8)
 test_batches = list(sparse_corpus.batches(corpus, 512, 54, start=50))
 
 # initParameters-time frequency stats -> replicated Zipf head (paper sec. 4)
-hot = sparse_lr.hot_ids_from_corpus(cfg, train_batches(), mesh)
+hot = hot_ids_from_corpus(cfg, train_batches(), mesh)
 
-with jax.set_mesh(mesh):
-    out = sparse_lr.dpmr_train(cfg, mesh, train_batches, 512, hot_ids=hot)
-    metrics = sparse_lr.evaluate(out["state"], out["fns"], test_batches,
-                                 mesh)
+engine = DPMREngine(cfg, mesh, hot_ids=hot)
+history = engine.fit(train_batches)
+metrics = engine.evaluate(test_batches)
 
-print("loss per iteration:",
-      [round(h["loss"], 4) for h in out["history"]])
+print("strategies available:", list_strategies())
+print("loss per iteration:", [round(h["loss"], 4) for h in history])
 print("test metrics:", {k: round(v, 3) for k, v in metrics.items()})
 assert metrics["f_avg"] > 0.5
 print("OK - DPMR trained and classified on a", mesh.shape, "mesh")

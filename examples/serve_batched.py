@@ -4,36 +4,62 @@ Exercises the production serve path (prefill -> KV/state cache -> decode
 steps) for a dense, an SSM, and an MoE architecture.
 
     PYTHONPATH=src python examples/serve_batched.py
+    PYTHONPATH=src python examples/serve_batched.py --no-smoke \
+        --archs yi-6b --decode-steps 4     # full config (slow on CPU)
 """
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.configs.base import ParallelConfig, TrainConfig
 from repro.launch.mesh import make_host_mesh
 from repro.models import registry
 from repro.train import serve, trainer
 
-mesh = make_host_mesh(1, 1)
-rng = np.random.default_rng(0)
 
-for arch in ("yi-6b", "xlstm-125m", "phi3.5-moe-42b-a6.6b"):
-    cfg = registry.smoke_config(arch)
-    spec = registry.get_spec(arch)
-    with jax.set_mesh(mesh):
-        state = trainer.init_state(spec, cfg, TrainConfig(optimizer="sgd"),
-                                   ParallelConfig(), jax.random.PRNGKey(1))
-        batch = {"tokens": jnp.asarray(
-            rng.integers(0, cfg.vocab_size, size=(4, 32)), jnp.int32)}
-        if cfg.family == "encdec":
-            batch["frames"] = jnp.asarray(
-                rng.normal(size=(4, 32, cfg.d_model)), jnp.float32)
-        t0 = time.time()
-        toks = serve.greedy_decode(spec, cfg, state["params"], batch, 12,
-                                   ParallelConfig(seq_shard=False))
-        dt = time.time() - t0
-    print(f"{arch:24s} decoded {toks.shape[0]}x{toks.shape[1]} tokens "
-          f"in {dt:5.2f}s -> {np.asarray(toks[0, :8])}")
-print("OK")
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="reduced same-family configs (--no-smoke = full)")
+    ap.add_argument("--archs", nargs="+",
+                    default=["yi-6b", "xlstm-125m", "phi3.5-moe-42b-a6.6b"])
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--decode-steps", type=int, default=12)
+    args = ap.parse_args()
+
+    mesh = make_host_mesh(1, 1)
+    rng = np.random.default_rng(0)
+
+    for arch in args.archs:
+        cfg = registry.smoke_config(arch) if args.smoke else \
+            registry.get_spec(arch).cfg
+        spec = registry.get_spec(arch)
+        with compat.set_mesh(mesh):
+            state = trainer.init_state(spec, cfg,
+                                       TrainConfig(optimizer="sgd"),
+                                       ParallelConfig(), jax.random.PRNGKey(1))
+            batch = {"tokens": jnp.asarray(
+                rng.integers(0, cfg.vocab_size,
+                             size=(args.batch, args.prompt_len)), jnp.int32)}
+            if cfg.family == "encdec":
+                batch["frames"] = jnp.asarray(
+                    rng.normal(size=(args.batch, args.prompt_len,
+                                     cfg.d_model)), jnp.float32)
+            t0 = time.time()
+            toks = serve.greedy_decode(spec, cfg, state["params"], batch,
+                                       args.decode_steps,
+                                       ParallelConfig(seq_shard=False))
+            dt = time.time() - t0
+        print(f"{arch:24s} decoded {toks.shape[0]}x{toks.shape[1]} tokens "
+              f"in {dt:5.2f}s -> {np.asarray(toks[0, :8])}")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,20 +2,21 @@
 
 The paper's model class is sparse logistic regression over huge feature
 spaces — its "~100M model" is a 100M-feature table (the paper itself runs
-50B). This driver runs minibatch DPMR-SGD for a few hundred steps over a
-synthetic Zipf corpus of that scale, with hot-feature replication, and
-reports convergence + test metrics.
+50B). This driver runs minibatch DPMR-SGD through `DPMREngine` for a few
+hundred steps over a synthetic Zipf corpus of that scale, with hot-feature
+replication, and reports convergence + test metrics. `--distribution`
+selects any registered strategy; `--ckpt` exercises the engine's sparse
+checkpoint story.
 
     PYTHONPATH=src python examples/train_dpmr_100m.py            # 2^24 feats
-    PYTHONPATH=src python examples/train_dpmr_100m.py --log2-features 27
+    PYTHONPATH=src python examples/train_dpmr_100m.py --log2-features 27 \
+        --distribution psum_scatter --ckpt /tmp/dpmr100m
 """
 import argparse
 import time
 
-import jax
-
+from repro.api import DPMREngine, hot_ids_from_corpus, list_strategies
 from repro.configs.base import DPMRConfig
-from repro.core import sparse_lr
 from repro.data import sparse_corpus
 from repro.launch.mesh import make_host_mesh
 
@@ -26,6 +27,10 @@ def main():
                     help="27 => ~134M features/params")
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--batch", type=int, default=4096)
+    ap.add_argument("--distribution", default="a2a",
+                    choices=list_strategies())
+    ap.add_argument("--ckpt", default="",
+                    help="save the trained sparse state here")
     args = ap.parse_args()
 
     f = 1 << args.log2_features
@@ -33,29 +38,30 @@ def main():
                                       features_per_sample=64,
                                       signal_features=4096)
     cfg = DPMRConfig(num_features=f, max_features_per_sample=64,
-                     learning_rate=2.0, max_hot=512, optimizer="adagrad")
+                     learning_rate=2.0, max_hot=512, optimizer="adagrad",
+                     distribution=args.distribution)
     mesh = make_host_mesh(1, 1)
 
-    hot = sparse_lr.hot_ids_from_corpus(
+    hot = hot_ids_from_corpus(
         cfg, sparse_corpus.batches(corpus, args.batch, 4), mesh)
+    engine = DPMREngine(cfg, mesh, hot_ids=hot)
 
     t0 = time.time()
-    with jax.set_mesh(mesh):
-        out = sparse_lr.dpmr_train_sgd(
-            cfg, mesh,
-            sparse_corpus.batches(corpus, args.batch, args.steps),
-            args.batch, hot_ids=hot)
-        test = list(sparse_corpus.batches(corpus, args.batch, 1003,
-                                          start=1000))
-        metrics = sparse_lr.evaluate(out["state"], out["fns"], test, mesh)
+    history = engine.fit_sgd(
+        sparse_corpus.batches(corpus, args.batch, args.steps))
+    test = list(sparse_corpus.batches(corpus, args.batch, 1003, start=1000))
+    metrics = engine.evaluate(test)
     dt = time.time() - t0
 
-    h = out["history"]
-    print(f"features={f:.2e} steps={args.steps} batch={args.batch}")
-    print(f"loss: {h[0]['loss']:.4f} -> {h[-1]['loss']:.4f} "
+    print(f"features={f:.2e} steps={args.steps} batch={args.batch} "
+          f"strategy={args.distribution}")
+    print(f"loss: {history[0]['loss']:.4f} -> {history[-1]['loss']:.4f} "
           f"({args.steps * args.batch / dt:.0f} samples/s)")
     print("test:", {k: round(v, 3) for k, v in metrics.items()
                     if "avg" in k})
+    if args.ckpt:
+        step = engine.save(args.ckpt)
+        print(f"saved sparse checkpoint at step {step} -> {args.ckpt}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,30 @@
+#!/usr/bin/env bash
+# Repo health check: bytecode-compiles the tree, runs the fast tier-1 tests,
+# and smokes the public API registries. ROADMAP.md references this as the
+# pre-PR gate; run the full (slow-inclusive) suite with
+#   PYTHONPATH=src python -m pytest -q
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== compileall =="
+python -m compileall -q src benchmarks examples tests
+
+echo "== strategy-registry / engine smoke =="
+python -c "
+from repro.api import DPMREngine, list_strategies, get_strategy
+names = list_strategies()
+assert {'a2a', 'allgather', 'psum_scatter'} <= set(names), names
+for n in names:
+    get_strategy(n)
+from repro.optim import optimizers, schedules
+assert {'sgd', 'adagrad', 'momentum'} <= set(optimizers.SPARSE_OPTIMIZERS)
+assert {'constant', 'warmup_cosine'} <= set(schedules.SCHEDULES)
+print('registries OK:', names)
+"
+
+echo "== tier-1 tests (fast; -m 'not slow') =="
+python -m pytest -x -q -m "not slow"
+
+echo "ALL CHECKS PASSED"

@@ -1,0 +1,33 @@
+"""Typed public API for the DPMR sparse core.
+
+    from repro.api import DPMREngine, register_strategy, list_strategies
+
+`DPMREngine` is the façade (state + compiled StepFns + batch placement +
+checkpointing); the strategy registry makes the parameter-distribution
+shuffle a pluggable component. The legacy fn-dict surfaces in
+`repro.core.api` / `repro.core.sparse_lr` delegate here and will be removed
+after one release.
+"""
+from repro.api.engine import (
+    DPMREngine,
+    hot_ids_from_corpus,
+    put_batch,
+)
+from repro.api.strategies import (
+    AllGatherStrategy,
+    AllToAllStrategy,
+    DistributionStrategy,
+    PsumScatterStrategy,
+    StrategyContext,
+    get_strategy,
+    list_strategies,
+    register_strategy,
+)
+from repro.core.dpmr import DPMRState, StepFns, init_state, make_step_fns
+
+__all__ = [
+    "AllGatherStrategy", "AllToAllStrategy", "DPMREngine", "DPMRState",
+    "DistributionStrategy", "PsumScatterStrategy", "StepFns",
+    "StrategyContext", "get_strategy", "hot_ids_from_corpus", "init_state",
+    "list_strategies", "make_step_fns", "put_batch", "register_strategy",
+]

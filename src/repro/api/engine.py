@@ -1,0 +1,235 @@
+"""`DPMREngine` — the typed façade over the DPMR sparse core.
+
+One object owns the compiled step functions (`StepFns`), the sharded
+`DPMRState`, host→device batch placement, the optimizer/schedule selection,
+and the checkpoint story:
+
+    from repro.api import DPMREngine
+
+    eng = DPMREngine(cfg, mesh, hot_ids=hot)
+    eng.fit_sgd(batches)                   # minibatch SGD
+    eng.fit(batch_iter_fn)                 # paper-regime full-batch GD
+    probs = eng.predict(batch)
+    metrics = eng.evaluate(test_batches)
+    eng.save("/ckpt/dir"); eng.restore("/ckpt/dir")
+
+Step functions are compiled lazily per global batch size and cached, so one
+engine serves training and differently-sized eval batches. The distribution
+strategy (`cfg.distribution`) is resolved through the registry in
+`repro.api.strategies`.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Iterable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import compat
+from repro.ckpt.checkpointer import Checkpointer
+from repro.configs.base import DPMRConfig
+from repro.core import dpmr, hot_sharding
+from repro.core.dpmr import StepFns
+
+
+def put_batch(batch: dict, mesh) -> dict:
+    """Host→device placement: every batch leaf sharded over all mesh axes."""
+    axes = tuple(mesh.axis_names)
+    sharding = NamedSharding(mesh, P(axes))
+    return {k: jax.device_put(jnp.asarray(v), sharding)
+            for k, v in batch.items()}
+
+
+def binary_prf_metrics(predict_fn: Callable[[dict], np.ndarray],
+                       test_batches: Iterable[dict]) -> Dict:
+    """Fig. 1 metrics: per-class precision/recall/F + macro average.
+
+    `predict_fn(batch) -> probs`; batches must carry "labels". Shared by
+    DPMREngine.evaluate and the deprecated sparse_lr.evaluate shim.
+    """
+    tp = fp = fn_ = tn = 0
+    for batch in test_batches:
+        pred = (predict_fn(batch) >= 0.5).astype(np.int32)
+        y = np.asarray(batch["labels"])
+        tp += int(np.sum((pred == 1) & (y == 1)))
+        fp += int(np.sum((pred == 1) & (y == 0)))
+        fn_ += int(np.sum((pred == 0) & (y == 1)))
+        tn += int(np.sum((pred == 0) & (y == 0)))
+
+    def prf(tp, fp, fn):
+        p = tp / max(tp + fp, 1)
+        r = tp / max(tp + fn, 1)
+        f = 2 * p * r / max(p + r, 1e-9)
+        return p, r, f
+
+    p1, r1, f1 = prf(tp, fp, fn_)
+    p0, r0, f0 = prf(tn, fn_, fp)
+    return {
+        "precision_pos": p1, "recall_pos": r1, "f_pos": f1,
+        "precision_neg": p0, "recall_neg": r0, "f_neg": f0,
+        "precision_avg": (p1 + p0) / 2, "recall_avg": (r1 + r0) / 2,
+        "f_avg": (f1 + f0) / 2,
+    }
+
+
+def hot_ids_from_corpus(cfg: DPMRConfig, sample_batches: Iterable[dict],
+                        mesh) -> jax.Array:
+    """initParameters-time frequency statistics -> replicated hot set."""
+    f = dpmr.padded_features(cfg, mesh)
+    counts = jnp.zeros((f,), jnp.int32)
+    for b in sample_batches:
+        counts = counts + hot_sharding.feature_counts(
+            jnp.asarray(b["ids"]), f)
+    return hot_sharding.select_hot(counts, cfg.hot_threshold, cfg.max_hot)
+
+
+class DPMREngine:
+    """Typed façade: state + compiled steps + checkpointing for sparse DPMR.
+
+    Parameters
+    ----------
+    cfg:         DPMRConfig (features, strategy, optimizer, schedule, ...)
+    mesh:        jax Mesh; every device is one DPMR node (samples + params)
+    kernel_impl: computeGradients map body ("jnp" | "pallas" |
+                 "pallas_interpret")
+    cap_factor:  a2a capacity factor (slots per (src,dst) pair = cap_factor
+                 x the uniform mean)
+    hot_ids:     replicated Zipf-head ids (see `hot_ids_from_corpus`); None
+                 disables hot replication
+    state:       resume from an existing DPMRState instead of zeros
+    """
+
+    def __init__(self, cfg: DPMRConfig, mesh, *, kernel_impl: str = "jnp",
+                 cap_factor: float = 4.0, hot_ids=None,
+                 state: Optional[dpmr.DPMRState] = None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.kernel_impl = kernel_impl
+        self.cap_factor = cap_factor
+        self._fns: Dict[int, StepFns] = {}
+        self._schedule = dpmr.make_schedule(cfg)
+        with compat.set_mesh(mesh):
+            self.state = state if state is not None else dpmr.init_state(
+                cfg, mesh, hot_ids)
+
+    # -- step-function compilation cache ------------------------------------
+
+    def step_fns(self, batch_size: int) -> StepFns:
+        """Compiled StepFns for a given GLOBAL batch size (cached)."""
+        fns = self._fns.pop(batch_size, None)
+        if fns is None:
+            with compat.set_mesh(self.mesh):
+                fns = dpmr.make_step_fns(
+                    self.cfg, self.mesh, batch_size,
+                    kernel_impl=self.kernel_impl,
+                    cap_factor=self.cap_factor)
+        self._fns[batch_size] = fns     # move to the end: most recently used
+        return fns
+
+    @property
+    def fns(self) -> StepFns:
+        """StepFns of the most recently used batch size."""
+        if not self._fns:
+            raise RuntimeError("no step fns compiled yet; run a step or "
+                               "call engine.step_fns(batch_size)")
+        return next(reversed(self._fns.values()))
+
+    def put_batch(self, batch: dict) -> dict:
+        return put_batch(batch, self.mesh)
+
+    def learning_rate(self) -> float:
+        """Schedule value at the current step."""
+        return float(self._schedule(jnp.asarray(self.state.step)))
+
+    # -- training -----------------------------------------------------------
+
+    def train_step(self, batch: dict) -> Dict:
+        """One minibatch update; returns host-side metrics."""
+        fns = self.step_fns(len(batch["labels"]))
+        with compat.set_mesh(self.mesh):
+            self.state, m = fns.train_step(self.state,
+                                           self.put_batch(batch))
+        return {"loss": float(m["loss"]), "accuracy": float(m["accuracy"]),
+                "overflow": int(m["overflow"])}
+
+    def fit_sgd(self, batches: Iterable[dict]) -> List[Dict]:
+        """Minibatch SGD (one update per batch); returns the history."""
+        history: List[Dict] = []
+        for i, batch in enumerate(batches):
+            m = self.train_step(batch)
+            history.append({"step": i + 1, **m})
+        return history
+
+    def fit(self, batch_iter_fn: Callable[[], Iterable[dict]],
+            iterations: Optional[int] = None,
+            eval_fn: Optional[Callable[["DPMREngine"], Dict]] = None
+            ) -> List[Dict]:
+        """Full-batch gradient descent: one update per ITERATION over the
+        whole corpus (the paper's regime). `batch_iter_fn()` yields the
+        training corpus in fixed-size batches each time it is called."""
+        iterations = self.cfg.iterations if iterations is None else iterations
+        history: List[Dict] = []
+        for it in range(iterations):
+            acc_cold = jnp.zeros_like(self.state.cold)
+            acc_hot = jnp.zeros_like(self.state.hot)
+            tot_loss = tot_acc = 0.0
+            nb = 0
+            with compat.set_mesh(self.mesh):
+                for batch in batch_iter_fn():
+                    fns = self.step_fns(len(batch["labels"]))
+                    gc, gh, m = fns.grad_step(self.state,
+                                              self.put_batch(batch))
+                    acc_cold = acc_cold + gc
+                    acc_hot = acc_hot + gh
+                    tot_loss += float(m["loss"])
+                    tot_acc += float(m["accuracy"])
+                    nb += 1
+                self.state = fns.apply_update(
+                    self.state, acc_cold / nb, acc_hot / nb,
+                    self.learning_rate())
+            rec = {"iteration": it + 1, "loss": tot_loss / nb,
+                   "accuracy": tot_acc / nb}
+            if eval_fn is not None:
+                rec.update(eval_fn(self))
+            history.append(rec)
+        return history
+
+    # -- inference ----------------------------------------------------------
+
+    def predict(self, batch: dict) -> np.ndarray:
+        """Algorithm 9: probabilities for a test batch ({ids, vals})."""
+        fns = self.step_fns(len(batch["ids"]))
+        with compat.set_mesh(self.mesh):
+            probs = fns.predict(self.state, self.put_batch(
+                {k: batch[k] for k in ("ids", "vals")}))
+        return np.asarray(probs)
+
+    def evaluate(self, test_batches: Iterable[dict]) -> Dict:
+        """Fig. 1 metrics: per-class precision/recall/F + macro average."""
+        return binary_prf_metrics(self.predict, test_batches)
+
+    # -- checkpointing -------------------------------------------------------
+
+    def save(self, directory: str, *, keep: int = 3,
+             block: bool = True) -> int:
+        """Atomic checkpoint of the sparse state; returns the step saved."""
+        step = int(self.state.step)
+        Checkpointer(directory, keep=keep).save(
+            step, self.state, block=block,
+            extra={"kind": "dpmr_sparse",
+                   "distribution": self.cfg.distribution,
+                   "optimizer": self.cfg.optimizer,
+                   "num_features": self.cfg.num_features})
+        return step
+
+    def restore(self, directory: str, step: Optional[int] = None) -> Dict:
+        """Restore state in place (latest step by default); returns the
+        checkpoint manifest. Leaves are placed under the engine's current
+        shardings, so restoring onto a different mesh re-shards (for a mesh
+        with a different shard count, re-pad via runtime/elastic.py)."""
+        with compat.set_mesh(self.mesh):
+            self.state, manifest = Checkpointer(directory).restore(
+                self.state, step=step)
+        return manifest

@@ -1,0 +1,211 @@
+"""Pluggable parameter-distribution strategies for the DPMR sparse engine.
+
+The paper's distributeParameters / gradient-reduce shuffle is one point in a
+design space (its §5 comparison against broadcast-style distribution is the
+central efficiency claim). This module makes that axis a first-class,
+registry-backed component: a `DistributionStrategy` implements the two
+collective-bearing stages of the per-device pipeline, and `core.dpmr` asks
+the registry for whichever one `DPMRConfig.distribution` names.
+
+Built-ins (bytes/device counts BOTH the forward and the reduce collective;
+the seed's benchmark counted only the forward table movement for allgather):
+
+  a2a           the paper's shuffle: route_build + all_to_all of requested
+                rows, reverse all_to_all of per-feature gradient sums.
+                Bytes/device = 3 * P * cap * 4, independent of |F|.
+  allgather     the ship-the-table strawman: all_gather the full table for
+                lookups, dense scatter-add + psum_scatter for the reduce.
+                Bytes/device ~ 2 * |F| * 4.
+  psum_scatter  hybrid: sparse a2a shuffle forward (cheap lookups), dense
+                psum_scatter reduce (one fused collective, no reverse
+                shuffle). Bytes/device ~ 2 * P * cap * 4 + |F| * 4.
+
+All strategies produce identical parameters when capacity does not overflow
+(tested in tests/test_dpmr.py); they differ only in wire bytes and in how
+capacity-overflowed features degrade (a2a drops their gradients, the dense
+reducers keep them).
+
+Third parties extend the seam with either
+
+    @register_strategy("my_strategy")
+    class MyStrategy(DistributionStrategy): ...
+
+or `register_strategy("name", instance)`.
+
+Every method runs INSIDE shard_map: `cold_loc` is this device's block of the
+feature table and collectives run over `ctx.axes`.
+"""
+from __future__ import annotations
+
+import copy
+from typing import Dict, List, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparse
+
+
+class StrategyContext(NamedTuple):
+    """Static per-step geometry handed to every strategy method."""
+
+    axes: Tuple[str, ...]    # mesh axis names the pipeline is manual over
+    num_shards: int          # P = product of mesh axis sizes
+    block_size: int          # rows of the feature table per device
+    capacity: int            # per-(src,dst) a2a slots for cold features
+
+
+class DistributionStrategy:
+    """Interface for the distributeParameters / reduce pair of stages.
+
+    `distribute` returns the per-slot cold parameters plus an opaque
+    forward-state dict that the engine threads into `reduce`; `overflow`
+    must be a scalar int32 in that dict (0 when the strategy cannot drop).
+    """
+
+    name: str = "base"
+
+    def distribute(self, ctx: StrategyContext, cold_loc: jax.Array,
+                   cold_ids: jax.Array) -> Tuple[jax.Array, dict]:
+        raise NotImplementedError
+
+    def reduce(self, ctx: StrategyContext, cold_loc: jax.Array,
+               grads_flat: jax.Array, fwd: dict) -> jax.Array:
+        raise NotImplementedError
+
+    # wire-cost model (bytes per device per step), used by the benchmarks
+    def bytes_per_device(self, ctx: StrategyContext) -> int:
+        raise NotImplementedError
+
+
+def _owner_base(ctx: StrategyContext) -> jax.Array:
+    return jax.lax.axis_index(ctx.axes) * ctx.block_size
+
+
+def _sparse_distribute(ctx, cold_loc, cold_ids):
+    """The paper's Algorithm 4: request shuffle + owner lookup + response."""
+    routing = sparse.route_build(cold_ids, ctx.num_shards, ctx.block_size,
+                                 ctx.capacity)
+    req_recv = jax.lax.all_to_all(routing.req_ids, ctx.axes, 0, 0,
+                                  tiled=True)
+    resp = sparse.owner_apply(req_recv, cold_loc, _owner_base(ctx))
+    resp_back = jax.lax.all_to_all(resp, ctx.axes, 0, 0, tiled=True)
+    theta_cold = sparse.route_return(routing, resp_back)
+    return theta_cold, {"routing": routing, "req_recv": req_recv,
+                        "cold_ids": cold_ids, "overflow": routing.overflow}
+
+
+def _dense_reduce(ctx, cold_loc, grads_flat, cold_ids):
+    """Dense accumulate + psum_scatter: every device folds its gradients
+    into a full-length vector; one collective delivers owner blocks."""
+    f = cold_loc.shape[0] * ctx.num_shards
+    gfull = jnp.zeros((f,), jnp.float32).at[
+        jnp.where(cold_ids >= 0, cold_ids, f)
+    ].add(jnp.where(cold_ids >= 0, grads_flat, 0.0), mode="drop")
+    return jax.lax.psum_scatter(gfull, ctx.axes, scatter_dimension=0,
+                                tiled=True)
+
+
+class AllToAllStrategy(DistributionStrategy):
+    """Paper-faithful DPMR shuffle in both directions."""
+
+    name = "a2a"
+
+    def distribute(self, ctx, cold_loc, cold_ids):
+        return _sparse_distribute(ctx, cold_loc, cold_ids)
+
+    def reduce(self, ctx, cold_loc, grads_flat, fwd):
+        send = sparse.combine_grads(fwd["routing"], grads_flat)
+        recv = jax.lax.all_to_all(send, ctx.axes, 0, 0, tiled=True)
+        return sparse.owner_accumulate(fwd["req_recv"], recv,
+                                       jnp.zeros_like(cold_loc),
+                                       _owner_base(ctx))
+
+    def bytes_per_device(self, ctx):
+        return 3 * ctx.num_shards * ctx.capacity * 4
+
+
+class AllGatherStrategy(DistributionStrategy):
+    """Ship-the-table baseline (the paper's comparison point)."""
+
+    name = "allgather"
+
+    def distribute(self, ctx, cold_loc, cold_ids):
+        table = jax.lax.all_gather(cold_loc, ctx.axes, tiled=True)
+        theta_cold = jnp.where(cold_ids >= 0,
+                               table[jnp.clip(cold_ids, 0)], 0.0)
+        return theta_cold, {"cold_ids": cold_ids,
+                            "overflow": jnp.zeros((), jnp.int32)}
+
+    def reduce(self, ctx, cold_loc, grads_flat, fwd):
+        return _dense_reduce(ctx, cold_loc, grads_flat, fwd["cold_ids"])
+
+    def bytes_per_device(self, ctx):
+        # forward ring all_gather + reduce psum_scatter, each moving
+        # (P-1) blocks of |F|/P rows through every device
+        return 2 * ctx.block_size * (ctx.num_shards - 1) * 4
+
+
+class PsumScatterStrategy(DistributionStrategy):
+    """Hybrid: sparse shuffle forward, dense psum_scatter reduce.
+
+    Keeps the forward wire cost |F|-independent while collapsing the reduce
+    into one fused collective — attractive when the backward shuffle (not
+    the lookup) is the bottleneck and a transient (|F|,) accumulation
+    buffer per device is affordable.
+    """
+
+    name = "psum_scatter"
+
+    def distribute(self, ctx, cold_loc, cold_ids):
+        return _sparse_distribute(ctx, cold_loc, cold_ids)
+
+    def reduce(self, ctx, cold_loc, grads_flat, fwd):
+        return _dense_reduce(ctx, cold_loc, grads_flat, fwd["cold_ids"])
+
+    def bytes_per_device(self, ctx):
+        return (2 * ctx.num_shards * ctx.capacity * 4
+                + ctx.block_size * (ctx.num_shards - 1) * 4)
+
+
+_REGISTRY: Dict[str, DistributionStrategy] = {}
+
+
+def register_strategy(name: str, strategy: DistributionStrategy = None):
+    """Register a strategy instance, or use as a class decorator:
+
+        @register_strategy("mine")
+        class Mine(DistributionStrategy): ...
+    """
+    if strategy is not None:
+        # shallow-copy so aliasing an existing instance doesn't rename it
+        inst = copy.copy(strategy)
+        inst.name = name
+        _REGISTRY[name] = inst
+        return inst
+
+    def _decorate(cls):
+        inst = cls() if isinstance(cls, type) else cls
+        inst.name = name
+        _REGISTRY[name] = inst
+        return cls
+
+    return _decorate
+
+
+def get_strategy(name: str) -> DistributionStrategy:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown distribution strategy {name!r}; "
+            f"registered: {sorted(_REGISTRY)}") from None
+
+
+def list_strategies() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+register_strategy("a2a", AllToAllStrategy())
+register_strategy("allgather", AllGatherStrategy())
+register_strategy("psum_scatter", PsumScatterStrategy())

@@ -1,0 +1,78 @@
+"""Version-portable wrappers over the handful of jax APIs that moved.
+
+The repo targets the current jax surface (``jax.shard_map``, ``jax.set_mesh``,
+``jax.sharding.AxisType``); the container may pin an older release where those
+live under ``jax.experimental.shard_map`` / don't exist yet. Every module that
+needs one of these goes through this file so the rest of the codebase is
+written once, against the new names.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Sequence, Set
+
+import jax
+
+_HAS_NEW_SHARD_MAP = hasattr(jax, "shard_map")
+_HAS_SET_MESH = hasattr(jax, "set_mesh")
+_HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]):
+    """jax.make_mesh with Auto axis_types where the kwarg exists."""
+    if _HAS_AXIS_TYPE:
+        auto = (jax.sharding.AxisType.Auto,) * len(axis_names)
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                             axis_types=auto)
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+
+
+def set_mesh(mesh):
+    """Context manager activating `mesh` (jax.set_mesh on new jax)."""
+    if _HAS_SET_MESH:
+        return jax.set_mesh(mesh)
+    if mesh is None:
+        return contextlib.nullcontext()
+    # jax.sharding.Mesh has been a context manager since the pjit era
+    return mesh
+
+
+def get_abstract_mesh():
+    """The mesh of the ambient context (jax.sharding.get_abstract_mesh on
+    new jax; the `with mesh:` physical mesh on old). May be empty."""
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        return jax.sharding.get_abstract_mesh()
+    from jax.interpreters import pxla
+
+    return pxla.thread_resources.env.physical_mesh
+
+
+def axis_size(axis_name):
+    """Size of a mapped mesh axis inside shard_map (jax.lax.axis_size on
+    new jax; a psum of ones on old, which folds to the same constant)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs,
+              axis_names: Optional[Set[str]] = None, check_vma: bool = False):
+    """jax.shard_map(...) on new jax; experimental.shard_map on old.
+
+    `axis_names` follows the NEW convention: the set of mesh axes that are
+    manual inside `f` (None = all of them). On old jax this is translated to
+    the `auto` complement set.
+    """
+    if _HAS_NEW_SHARD_MAP:
+        kw = {}
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma, **kw)
+    from jax.experimental import shard_map as _sm
+
+    auto = frozenset()
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _sm.shard_map(f, mesh, in_specs=in_specs, out_specs=out_specs,
+                         check_rep=check_vma, auto=auto)

@@ -189,10 +189,18 @@ class DPMRConfig:
     max_hot: int = 512               # cap on replicated hot features
     learning_rate: float = 0.5
     iterations: int = 4
-    distribution: str = "a2a"        # a2a | allgather (collective strategy)
+    distribution: str = "a2a"        # any name in the repro.api strategy
+    #                                  registry (a2a | allgather |
+    #                                  psum_scatter | user-registered)
     grad_scale: str = "mean"         # mean | sum (paper: sum, full-batch GD)
-    optimizer: str = "sgd"           # sgd (paper's GD) | adagrad (the paper's
-    #                                  `optimize(para, grad)` hook, Alg. 7:12,
-    #                                  with DPMR-sharded accumulator state)
+    optimizer: str = "sgd"           # any name in optim.SPARSE_OPTIMIZERS
+    #                                  (sgd = the paper's GD; adagrad /
+    #                                  momentum via the `optimize(para,grad)`
+    #                                  hook, Alg. 7:12, with DPMR-sharded
+    #                                  accumulator state)
     adagrad_eps: float = 1e-6
+    momentum: float = 0.9            # sparse momentum optimizer coefficient
+    schedule: str = "constant"       # any name in optim.schedules.SCHEDULES
+    warmup_steps: int = 0            # schedule parameters (warmup_cosine)
+    total_steps: int = 0
     seed: int = 0

@@ -1,8 +1,16 @@
-"""Public API of the DPMR core."""
+"""Legacy public API of the DPMR core.
+
+Prefer `repro.api` (the typed `DPMREngine` façade + strategy registry);
+this module keeps the flat re-exports working for one release. The training
+entry points re-exported from `core.sparse_lr` emit DeprecationWarnings —
+see that module's docstring for the old→new migration table.
+"""
 from repro.core.dpmr import (
     DPMRState,
+    StepFns,
     capacity,
     init_state,
+    make_schedule,
     make_step_fns,
     num_shards,
     optimize,
@@ -32,10 +40,11 @@ from repro.core.sparse_lr import (
 )
 
 __all__ = [
-    "DPMRState", "Routing", "capacity", "combine_grads", "dpmr_classify",
-    "dpmr_dense_linear", "dpmr_train", "dpmr_train_sgd", "evaluate",
-    "feature_counts", "fsdp_specs", "hot_ids_from_corpus", "init_state",
-    "load_imbalance", "make_step_fns", "num_shards", "optimize",
-    "owner_accumulate", "owner_apply", "padded_features", "route_build",
-    "route_return", "select_hot", "split_hot",
+    "DPMRState", "Routing", "StepFns", "capacity", "combine_grads",
+    "dpmr_classify", "dpmr_dense_linear", "dpmr_train", "dpmr_train_sgd",
+    "evaluate", "feature_counts", "fsdp_specs", "hot_ids_from_corpus",
+    "init_state", "load_imbalance", "make_schedule", "make_step_fns",
+    "num_shards", "optimize", "owner_accumulate", "owner_apply",
+    "padded_features", "route_build", "route_return", "select_hot",
+    "split_hot",
 ]

@@ -19,26 +19,28 @@ exactly the paper's HDFS co-location):
   hot sharding          §4             hot set replicated, grads psum'd
                                        (see core.hot_sharding)
 
-Two distribution strategies (cfg.distribution):
-  "a2a"       the DPMR shuffle: bytes/device ~ 3 * P * cap * 4 per step,
-              independent of feature-space size F.
-  "allgather" the parameter-server-free strawman (gather the whole table):
-              bytes/device ~ F * 4. Used as the comparison baseline in the
-              benchmarks — the paper's speedup claim is exactly that the
-              shuffle beats shipping the table.
+The distributeParameters / gradient-reduce collectives are pluggable
+`DistributionStrategy` objects looked up by name from `repro.api.strategies`
+(cfg.distribution: "a2a" | "allgather" | "psum_scatter" | anything third
+parties register). The optimizer applied in updateParameters and the
+learning-rate schedule come from the shared `repro.optim` registries, so the
+sparse face selects them exactly like the dense trainer does.
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Tuple
+import warnings
+from typing import Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import DPMRConfig
 from repro.core import hot_sharding, sparse
 from repro.kernels import ops
+from repro.optim import optimizers, schedules
 
 
 class DPMRState(NamedTuple):
@@ -66,13 +68,18 @@ def padded_features(cfg: DPMRConfig, mesh) -> int:
     return -(-cfg.num_features // p) * p
 
 
-def capacity(cfg: DPMRConfig, batch_local: int, mesh,
-             factor: float = 4.0) -> int:
-    """Per-(src,dst) a2a slots for cold features: factor x the uniform mean."""
-    p = num_shards(mesh)
+def capacity_for_shards(cfg: DPMRConfig, batch_local: int, p: int,
+                        factor: float = 4.0) -> int:
+    """`capacity` for an analytic shard count (no mesh required)."""
     n = batch_local * cfg.max_features_per_sample
     mean = max(1, n // p)
     return int(min(n, max(16, -(-int(factor * mean) // 8) * 8)))
+
+
+def capacity(cfg: DPMRConfig, batch_local: int, mesh,
+             factor: float = 4.0) -> int:
+    """Per-(src,dst) a2a slots for cold features: factor x the uniform mean."""
+    return capacity_for_shards(cfg, batch_local, num_shards(mesh), factor)
 
 
 def init_state(cfg: DPMRConfig, mesh, hot_ids=None) -> DPMRState:
@@ -92,12 +99,20 @@ def init_state(cfg: DPMRConfig, mesh, hot_ids=None) -> DPMRState:
 
 
 def optimize(cfg: DPMRConfig, theta, acc, grad, lr):
-    """Algorithm 7 step 12: newPara = optimize(para, grad)."""
-    if cfg.optimizer == "adagrad":
-        acc = acc + grad * grad
-        step = grad * jax.lax.rsqrt(acc + cfg.adagrad_eps)
-        return theta - lr * step, acc
-    return theta - lr * grad, acc
+    """Algorithm 7 step 12: newPara = optimize(para, grad).
+
+    Delegates to the shared sparse-optimizer registry (optim/optimizers.py),
+    so the sparse face selects optimizers by name like the dense trainer.
+    """
+    return optimizers.get_sparse_optimizer(cfg.optimizer).update(
+        theta, acc, grad, lr, cfg)
+
+
+def make_schedule(cfg: DPMRConfig) -> Callable:
+    """LR schedule for the sparse face from the shared schedule registry."""
+    return schedules.get_schedule_by_name(
+        cfg.schedule, cfg.learning_rate,
+        warmup_steps=cfg.warmup_steps, total_steps=cfg.total_steps)
 
 
 # ---------------------------------------------------------------------------
@@ -105,64 +120,32 @@ def optimize(cfg: DPMRConfig, theta, acc, grad, lr):
 # ---------------------------------------------------------------------------
 
 
-def _device_fwd(cfg, axes, p, block, cap, kernel_impl,
+def _device_fwd(cfg, strategy, ctx, kernel_impl,
                 cold_loc, hot, hot_ids, ids, vals):
-    """Stages distribute+restore: returns (theta (B,K), routing, aux)."""
-    me = jax.lax.axis_index(axes)
-    base = me * block
+    """Stages distribute+restore: returns (theta (B,K), fwd-state, aux)."""
     flat = ids.reshape(-1)
     hot_slot, is_hot, cold_ids = hot_sharding.split_hot(flat, hot_ids)
 
-    if cfg.distribution == "allgather":
-        table = jax.lax.all_gather(cold_loc, axes, tiled=True)       # (F,)
-        theta_cold = jnp.where(cold_ids >= 0,
-                               table[jnp.clip(cold_ids, 0)], 0.0)
-        routing = None
-        overflow = jnp.zeros((), jnp.int32)
-    else:
-        routing = sparse.route_build(cold_ids, p, block, cap)
-        req_recv = jax.lax.all_to_all(routing.req_ids, axes, 0, 0, tiled=True)
-        resp = sparse.owner_apply(req_recv, cold_loc, base)
-        resp_back = jax.lax.all_to_all(resp, axes, 0, 0, tiled=True)
-        theta_cold = sparse.route_return(routing, resp_back)
-        req_recv_saved = req_recv
-        overflow = routing.overflow
+    theta_cold, fwd = strategy.distribute(ctx, cold_loc, cold_ids)
 
     theta_hot = jnp.where(is_hot, hot[jnp.clip(hot_slot, 0)], 0.0)
     theta = (theta_cold + theta_hot).reshape(ids.shape)
-    aux = {
-        "hot_slot": hot_slot, "is_hot": is_hot, "cold_ids": cold_ids,
-        "overflow": overflow,
-        "req_recv": None if routing is None else req_recv_saved,
-    }
-    return theta, routing, aux
+    aux = {"hot_slot": hot_slot, "is_hot": is_hot,
+           "overflow": fwd["overflow"]}
+    return theta, fwd, aux
 
 
-def _device_grads(cfg, axes, p, block, cap, kernel_impl,
-                  cold_loc, grads_slot, routing, aux):
+def _device_grads(cfg, strategy, ctx, kernel_impl,
+                  cold_loc, grads_slot, fwd, aux):
     """Reduce stages: per-feature sums delivered to owners + hot psum."""
-    me = jax.lax.axis_index(axes)
-    base = me * block
     gflat = grads_slot.reshape(-1)
-
-    if cfg.distribution == "allgather":
-        f = cold_loc.shape[0] * p
-        gfull = jnp.zeros((f,), jnp.float32).at[
-            jnp.where(aux["cold_ids"] >= 0, aux["cold_ids"], f)
-        ].add(jnp.where(aux["cold_ids"] >= 0, gflat, 0.0), mode="drop")
-        grad_cold = jax.lax.psum_scatter(gfull, axes, scatter_dimension=0,
-                                         tiled=True)
-    else:
-        send = sparse.combine_grads(routing, gflat)
-        recv = jax.lax.all_to_all(send, axes, 0, 0, tiled=True)
-        grad_cold = sparse.owner_accumulate(
-            aux["req_recv"], recv, jnp.zeros_like(cold_loc), base)
+    grad_cold = strategy.reduce(ctx, cold_loc, gflat, fwd)
 
     hot_n = jnp.zeros((cfg.max_hot,), jnp.float32)
     ghot = hot_n.at[jnp.where(aux["is_hot"], aux["hot_slot"],
                               cfg.max_hot)].add(
         jnp.where(aux["is_hot"], gflat, 0.0), mode="drop")
-    grad_hot = jax.lax.psum(ghot, axes)
+    grad_hot = jax.lax.psum(ghot, ctx.axes)
     return grad_cold, grad_hot
 
 
@@ -183,28 +166,63 @@ def _metrics(axes, probs, labels, nll, overflow):
 # ---------------------------------------------------------------------------
 
 
+class StepFns(NamedTuple):
+    """Typed bundle of compiled DPMR step functions + step geometry.
+
+    Replaces the raw fn-dict `make_step_fns` used to return. Dict-style
+    access (`fns["train_step"]`) still works for one release via
+    `__getitem__`, with a DeprecationWarning.
+    """
+
+    train_step: Callable     # (state, batch) -> (state, metrics)
+    grad_step: Callable      # (state, batch) -> (grad_cold, grad_hot, metrics)
+    apply_update: Callable   # (state, grad_cold, grad_hot, lr) -> state
+    predict: Callable        # (state, batch) -> probs
+    capacity: int            # per-(src,dst) a2a slots
+    block_size: int          # feature-table rows per device
+    num_shards: int          # P
+    strategy: str = "a2a"    # registered distribution-strategy name
+
+    def __getitem__(self, key):
+        if isinstance(key, str):
+            warnings.warn(
+                "fns[...] dict access is deprecated; use StepFns "
+                f"attributes (fns.{key})", DeprecationWarning, stacklevel=2)
+            return getattr(self, key)
+        return tuple.__getitem__(self, key)
+
+
 def make_step_fns(cfg: DPMRConfig, mesh, batch_size: int,
-                  kernel_impl: str = "jnp", cap_factor: float = 4.0):
-    """Build jitted {train_step, grad_step, apply_update, predict} for a
-    GLOBAL batch of `batch_size` samples (sharded over all mesh axes)."""
+                  kernel_impl: str = "jnp",
+                  cap_factor: float = 4.0) -> StepFns:
+    """Build jitted StepFns(train_step, grad_step, apply_update, predict)
+    for a GLOBAL batch of `batch_size` samples (sharded over all mesh
+    axes)."""
+    # late import: repro.api.engine imports this module
+    from repro.api.strategies import StrategyContext, get_strategy
+
     axes = _axes(mesh)
     p = num_shards(mesh)
     f = padded_features(cfg, mesh)
     block = f // p
     assert batch_size % p == 0, (batch_size, p)
     cap = capacity(cfg, batch_size // p, mesh, cap_factor)
+    strategy = get_strategy(cfg.distribution)
+    ctx = StrategyContext(axes=axes, num_shards=p, block_size=block,
+                          capacity=cap)
+    sched = make_schedule(cfg)
 
     def _fwd_grads(cold_loc, hot, hot_ids, ids, vals, labels):
-        theta, routing, aux = _device_fwd(
-            cfg, axes, p, block, cap, kernel_impl,
+        theta, fwd, aux = _device_fwd(
+            cfg, strategy, ctx, kernel_impl,
             cold_loc, hot, hot_ids, ids, vals)
         grads_slot, probs, nll = ops.sigmoid_grad(
             vals, theta, labels, impl=kernel_impl)
         if cfg.grad_scale == "mean":
             grads_slot = grads_slot / float(batch_size)
         grad_cold, grad_hot = _device_grads(
-            cfg, axes, p, block, cap, kernel_impl,
-            cold_loc, grads_slot, routing, aux)
+            cfg, strategy, ctx, kernel_impl,
+            cold_loc, grads_slot, fwd, aux)
         return grad_cold, grad_hot, _metrics(axes, probs, labels, nll,
                                              aux["overflow"])
 
@@ -212,7 +230,7 @@ def make_step_fns(cfg: DPMRConfig, mesh, batch_size: int,
                   ids, vals, labels):
         grad_cold, grad_hot, m = _fwd_grads(cold_loc, hot, hot_ids,
                                             ids, vals, labels)
-        lr = cfg.learning_rate
+        lr = sched(step)
         cold_new, cold_acc = optimize(cfg, cold_loc, cold_acc, grad_cold, lr)
         hot_new, hot_acc = optimize(cfg, hot, hot_acc, grad_hot, lr)
         return cold_new, hot_new, hot_ids, cold_acc, hot_acc, step + 1, m
@@ -221,14 +239,14 @@ def make_step_fns(cfg: DPMRConfig, mesh, batch_size: int,
         return _fwd_grads(cold_loc, hot, hot_ids, ids, vals, labels)
 
     def predict_dev(cold_loc, hot, hot_ids, ids, vals):
-        theta, _, _ = _device_fwd(cfg, axes, p, block, cap, kernel_impl,
+        theta, _, _ = _device_fwd(cfg, strategy, ctx, kernel_impl,
                                   cold_loc, hot, hot_ids, ids, vals)
         logits = jnp.sum(vals * theta, axis=-1)
         return jax.nn.sigmoid(logits)
 
     shard = P(axes)
     rep = P()
-    smap = functools.partial(jax.shard_map, mesh=mesh, check_vma=False)
+    smap = functools.partial(compat.shard_map, mesh=mesh, check_vma=False)
 
     train_m = smap(train_dev,
                    in_specs=(shard, rep, rep, shard, rep, rep,
@@ -267,6 +285,7 @@ def make_step_fns(cfg: DPMRConfig, mesh, batch_size: int,
         return pred_m(state.cold, state.hot, state.hot_ids,
                       batch["ids"], batch["vals"])
 
-    return {"train_step": train_step, "grad_step": grad_step,
-            "apply_update": apply_update, "predict": predict,
-            "capacity": cap, "block_size": block, "num_shards": p}
+    return StepFns(train_step=train_step, grad_step=grad_step,
+                   apply_update=apply_update, predict=predict,
+                   capacity=cap, block_size=block, num_shards=p,
+                   strategy=cfg.distribution)

@@ -1,120 +1,87 @@
-"""Distributed sparse logistic regression on the DPMR engine.
+"""DEPRECATED fn-dict surface for distributed sparse logistic regression.
 
-`dpmr_train` is Algorithm 1/8 (full-batch GD over the corpus per iteration,
-the paper's optimization regime); `dpmr_train_sgd` is the minibatch variant a
-modern deployment would run. `dpmr_classify` is Algorithm 9 and
-`evaluate` reproduces Figure 1's per-class precision / recall / F metrics.
+Everything here is a thin shim over `repro.api.DPMREngine` (the typed
+façade) kept for one release so old call sites keep working:
+
+  old                                   new
+  ---                                   ---
+  dpmr_train(cfg, mesh, it, bs)         DPMREngine(cfg, mesh).fit(it)
+  dpmr_train_sgd(cfg, mesh, bs, n)      DPMREngine(cfg, mesh).fit_sgd(bs)
+  dpmr_classify(state, fns, b, mesh)    engine.predict(b)
+  evaluate(state, fns, tb, mesh)        engine.evaluate(tb)
+  out["state"] / out["history"] /       engine.state / returned history /
+  out["fns"]                            engine.fns
+
+`hot_ids_from_corpus` and `_put_batch` are re-exported from their new home
+in `repro.api.engine`.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Iterable, List, Optional
+import warnings
+from typing import Callable, Dict, Iterable, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro.api.engine import (binary_prf_metrics, hot_ids_from_corpus,
+                              put_batch)
 from repro.configs.base import DPMRConfig
-from repro.core import dpmr, hot_sharding
 
-
-def hot_ids_from_corpus(cfg: DPMRConfig, sample_batches: Iterable[dict],
-                        mesh) -> jax.Array:
-    """initParameters-time frequency statistics -> replicated hot set."""
-    f = dpmr.padded_features(cfg, mesh)
-    counts = jnp.zeros((f,), jnp.int32)
-    for b in sample_batches:
-        counts = counts + hot_sharding.feature_counts(
-            jnp.asarray(b["ids"]), f)
-    return hot_sharding.select_hot(counts, cfg.hot_threshold, cfg.max_hot)
+__all__ = ["dpmr_classify", "dpmr_train", "dpmr_train_sgd", "evaluate",
+           "hot_ids_from_corpus"]
 
 
 def _put_batch(batch: dict, mesh) -> dict:
-    from jax.sharding import NamedSharding, PartitionSpec as P
+    return put_batch(batch, mesh)
 
-    axes = tuple(mesh.axis_names)
-    out = {}
-    for k, v in batch.items():
-        out[k] = jax.device_put(jnp.asarray(v),
-                                NamedSharding(mesh, P(axes)))
-    return out
+
+def _deprecated(old: str, new: str):
+    warnings.warn(f"repro.core.sparse_lr.{old} is deprecated; use {new}",
+                  DeprecationWarning, stacklevel=3)
+
+
+def _engine(cfg: DPMRConfig, mesh, hot_ids, kernel_impl: str):
+    from repro.api import DPMREngine
+
+    return DPMREngine(cfg, mesh, hot_ids=hot_ids, kernel_impl=kernel_impl)
 
 
 def dpmr_train(cfg: DPMRConfig, mesh, batch_iter_fn: Callable[[], Iterable],
                batch_size: int, *, hot_ids=None, kernel_impl: str = "jnp",
                eval_fn: Optional[Callable] = None) -> Dict:
-    """Full-batch gradient descent: one parameter update per ITERATION
-    (paper semantics). batch_iter_fn() yields the whole training corpus in
-    fixed-size batches each time it is called."""
-    fns = dpmr.make_step_fns(cfg, mesh, batch_size, kernel_impl)
-    state = dpmr.init_state(cfg, mesh, hot_ids)
-    history: List[Dict] = []
-    for it in range(cfg.iterations):
-        acc_cold = jnp.zeros_like(state.cold)
-        acc_hot = jnp.zeros_like(state.hot)
-        tot_loss, tot_acc, nb = 0.0, 0.0, 0
-        for batch in batch_iter_fn():
-            gb = _put_batch(batch, mesh)
-            gc, gh, m = fns["grad_step"](state, gb)
-            acc_cold = acc_cold + gc
-            acc_hot = acc_hot + gh
-            tot_loss += float(m["loss"])
-            tot_acc += float(m["accuracy"])
-            nb += 1
-        state = fns["apply_update"](state, acc_cold / nb, acc_hot / nb,
-                                    cfg.learning_rate)
-        rec = {"iteration": it + 1, "loss": tot_loss / nb,
-               "accuracy": tot_acc / nb}
-        if eval_fn is not None:
-            rec.update(eval_fn(state, fns))
-        history.append(rec)
-    return {"state": state, "history": history, "fns": fns}
+    """Deprecated: use DPMREngine(cfg, mesh).fit(batch_iter_fn)."""
+    _deprecated("dpmr_train", "repro.api.DPMREngine.fit")
+    eng = _engine(cfg, mesh, hot_ids, kernel_impl)
+    wrapped = None if eval_fn is None else (
+        lambda e: eval_fn(e.state, e.fns))
+    history = eng.fit(batch_iter_fn, eval_fn=wrapped)
+    return {"state": eng.state, "history": history,
+            "fns": eng.step_fns(batch_size)}
 
 
 def dpmr_train_sgd(cfg: DPMRConfig, mesh, batches: Iterable[dict],
                    batch_size: int, *, hot_ids=None,
                    kernel_impl: str = "jnp") -> Dict:
-    """Minibatch SGD variant (one update per batch)."""
-    fns = dpmr.make_step_fns(cfg, mesh, batch_size, kernel_impl)
-    state = dpmr.init_state(cfg, mesh, hot_ids)
-    history: List[Dict] = []
-    for i, batch in enumerate(batches):
-        state, m = fns["train_step"](state, _put_batch(batch, mesh))
-        history.append({"step": i + 1, "loss": float(m["loss"]),
-                        "accuracy": float(m["accuracy"]),
-                        "overflow": int(m["overflow"])})
-    return {"state": state, "history": history, "fns": fns}
+    """Deprecated: use DPMREngine(cfg, mesh).fit_sgd(batches)."""
+    _deprecated("dpmr_train_sgd", "repro.api.DPMREngine.fit_sgd")
+    eng = _engine(cfg, mesh, hot_ids, kernel_impl)
+    history = eng.fit_sgd(batches)
+    return {"state": eng.state, "history": history,
+            "fns": eng.step_fns(batch_size)}
 
 
 def dpmr_classify(state, fns, batch, mesh) -> np.ndarray:
-    """Algorithm 9: probabilities for a test batch."""
-    probs = fns["predict"](state, _put_batch(batch, mesh))
+    """Deprecated: use DPMREngine.predict(batch)."""
+    _deprecated("dpmr_classify", "repro.api.DPMREngine.predict")
+    probs = fns.predict(state, put_batch(batch, mesh))
     return np.asarray(probs)
 
 
 def evaluate(state, fns, test_batches: Iterable[dict], mesh) -> Dict:
-    """Fig. 1 metrics: per-class precision/recall/F + the macro average."""
-    tp = fp = fn_ = tn = 0
-    for batch in test_batches:
-        probs = dpmr_classify(state, fns, {k: batch[k] for k in
-                                           ("ids", "vals")}, mesh)
-        pred = (probs >= 0.5).astype(np.int32)
-        y = np.asarray(batch["labels"])
-        tp += int(np.sum((pred == 1) & (y == 1)))
-        fp += int(np.sum((pred == 1) & (y == 0)))
-        fn_ += int(np.sum((pred == 0) & (y == 1)))
-        tn += int(np.sum((pred == 0) & (y == 0)))
+    """Deprecated: use DPMREngine.evaluate(test_batches)."""
+    _deprecated("evaluate", "repro.api.DPMREngine.evaluate")
 
-    def prf(tp, fp, fn):
-        p = tp / max(tp + fp, 1)
-        r = tp / max(tp + fn, 1)
-        f = 2 * p * r / max(p + r, 1e-9)
-        return p, r, f
+    def predict(batch):
+        return np.asarray(fns.predict(state, put_batch(
+            {k: batch[k] for k in ("ids", "vals")}, mesh)))
 
-    p1, r1, f1 = prf(tp, fp, fn_)
-    p0, r0, f0 = prf(tn, fn_, fp)
-    return {
-        "precision_pos": p1, "recall_pos": r1, "f_pos": f1,
-        "precision_neg": p0, "recall_neg": r0, "f_neg": f0,
-        "precision_avg": (p1 + p0) / 2, "recall_avg": (r1 + r0) / 2,
-        "f_avg": (f1 + f0) / 2,
-    }
+    return binary_prf_metrics(predict, test_batches)

@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.launch.mesh import make_host_mesh
 from repro.models import registry
 from repro.train import serve, trainer
@@ -21,7 +22,11 @@ def main():
     logging.basicConfig(level=logging.INFO)
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true", default=True)
+    # BooleanOptionalAction so --no-smoke can actually select the full
+    # config (store_true with default=True could never be disabled)
+    ap.add_argument("--smoke", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="reduced same-family config (--no-smoke = full)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--decode-steps", type=int, default=16)
@@ -33,7 +38,7 @@ def main():
     cfg = registry.smoke_config(args.arch) if args.smoke else \
         registry.get_spec(args.arch).cfg
     spec = registry.get_spec(args.arch)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         state = trainer.init_state(spec, cfg, TrainConfig(optimizer="sgd"),
                                    ParallelConfig(), jax.random.PRNGKey(0))
         params = state["params"]

@@ -18,6 +18,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.ckpt.checkpointer import Checkpointer
 from repro.configs.base import ParallelConfig, TrainConfig
 from repro.data.pipeline import LMDataConfig, LMDataset, encdec_batch
@@ -44,7 +45,7 @@ def train_loop(args, fail_injector=None) -> dict:
     guard = PreemptionGuard() if args.preemption_guard else None
     watchdog = StragglerWatchdog()
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         state = trainer.init_state(spec, cfg, tc, pc,
                                    jax.random.PRNGKey(tc.seed))
         start_step = 0
@@ -108,7 +109,10 @@ def build_parser():
     ap.add_argument("--async-ckpt", action="store_true")
     ap.add_argument("--data-seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
-    ap.add_argument("--preemption-guard", action="store_true", default=True)
+    # BooleanOptionalAction so --no-preemption-guard is expressible
+    # (store_true with default=True could never be disabled)
+    ap.add_argument("--preemption-guard",
+                    action=argparse.BooleanOptionalAction, default=True)
     return ap
 
 

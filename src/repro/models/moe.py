@@ -24,6 +24,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs.base import ModelConfig
 from repro.sharding import Annotated
 
@@ -40,7 +41,7 @@ def _constrain_ep(x, e: int, spec_dims):
     from jax.sharding import PartitionSpec as P
 
     try:
-        mesh = jax.sharding.get_abstract_mesh()
+        mesh = compat.get_abstract_mesh()
         if mesh is None or mesh.empty:
             return x
         dims = []

@@ -132,3 +132,52 @@ OPTIMIZERS = {
 
 def get_optimizer(name: str) -> Optimizer:
     return OPTIMIZERS[name]
+
+
+# --- DPMR sparse-face optimizers --------------------------------------------
+#
+# The sparse engine (core/dpmr.py, Algorithm 7 step 12) carries exactly ONE
+# auxiliary array per parameter table (DPMRState.cold_acc / hot_acc), sharded
+# like the parameter itself — the DPMR co-location rule. Sparse optimizers
+# are therefore (theta, acc, grad, lr, cfg) -> (theta, acc) updates whose
+# whole state fits that slot. They are selected by DPMRConfig.optimizer
+# through the same named-registry pattern as the dense OPTIMIZERS table.
+
+
+class SparseOptimizer(NamedTuple):
+    update: Callable     # (theta, acc, grad, lr, cfg) -> (theta, acc)
+
+
+def _sparse_sgd(theta, acc, grad, lr, cfg):
+    return theta - lr * grad, acc
+
+
+def _sparse_adagrad(theta, acc, grad, lr, cfg):
+    acc = acc + grad * grad
+    step = grad * jax.lax.rsqrt(acc + cfg.adagrad_eps)
+    return theta - lr * step, acc
+
+
+def _sparse_momentum(theta, acc, grad, lr, cfg):
+    mu = cfg.momentum * acc + grad
+    return theta - lr * mu, mu
+
+
+SPARSE_OPTIMIZERS = {
+    "sgd": SparseOptimizer(_sparse_sgd),
+    "adagrad": SparseOptimizer(_sparse_adagrad),
+    "momentum": SparseOptimizer(_sparse_momentum),
+}
+
+
+def register_sparse_optimizer(name: str, update: Callable):
+    SPARSE_OPTIMIZERS[name] = SparseOptimizer(update)
+
+
+def get_sparse_optimizer(name: str) -> SparseOptimizer:
+    try:
+        return SPARSE_OPTIMIZERS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown sparse optimizer {name!r}; "
+            f"registered: {sorted(SPARSE_OPTIMIZERS)}") from None

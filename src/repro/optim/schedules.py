@@ -27,3 +27,33 @@ def get_schedule(cfg):
         return warmup_cosine(cfg.learning_rate, cfg.warmup_steps,
                              cfg.total_steps)
     return constant(cfg.learning_rate)
+
+
+def _warmup_cosine_checked(lr, warmup_steps=0, total_steps=0):
+    if total_steps <= warmup_steps:
+        raise ValueError(
+            f"warmup_cosine needs total_steps > warmup_steps, got "
+            f"total_steps={total_steps}, warmup_steps={warmup_steps}")
+    return warmup_cosine(lr, warmup_steps, total_steps)
+
+
+# Named registry (shared by the dense trainer and the DPMR sparse face).
+SCHEDULES = {
+    "constant": lambda lr, warmup_steps=0, total_steps=0: constant(lr),
+    "warmup_cosine": _warmup_cosine_checked,
+}
+
+
+def register_schedule(name: str, factory):
+    """factory: (lr, warmup_steps=..., total_steps=...) -> (step -> lr)."""
+    SCHEDULES[name] = factory
+
+
+def get_schedule_by_name(name: str, lr: float, *, warmup_steps: int = 0,
+                         total_steps: int = 0):
+    try:
+        factory = SCHEDULES[name]
+    except KeyError:
+        raise KeyError(f"unknown schedule {name!r}; "
+                       f"registered: {sorted(SCHEDULES)}") from None
+    return factory(lr, warmup_steps=warmup_steps, total_steps=total_steps)

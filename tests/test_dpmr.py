@@ -1,18 +1,22 @@
 """DPMR engine tests: routing oracles, hot sharding, convergence, strategy
-equivalence (a2a == allgather == dense oracle)."""
+equivalence (a2a == allgather == psum_scatter == dense oracle), the
+DPMREngine facade, capacity/overflow accounting, and checkpoint roundtrip."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.api import (DPMREngine, DistributionStrategy, hot_ids_from_corpus,
+                       get_strategy, list_strategies, register_strategy)
 from repro.configs.base import DPMRConfig
-from repro.core import dpmr, hot_sharding, sparse, sparse_lr
+from repro.core import dpmr, hot_sharding, sparse
 from repro.data import sparse_corpus
 from repro.launch.mesh import make_host_mesh
 
 F = 1 << 12
 SPEC = sparse_corpus.CorpusSpec(num_features=F, features_per_sample=16,
                                 signal_features=256, seed=0)
+STRATEGIES = ("a2a", "allgather", "psum_scatter")
 
 
 def _cfg(**kw):
@@ -41,6 +45,11 @@ def _dense_lr_oracle(batches, f, lr, iters, grad_scale="mean"):
             nb += 1
         theta = theta - lr * (acc / nb).astype(np.float32)
     return theta
+
+
+# ---------------------------------------------------------------------------
+# pure routing / hot-sharding oracles
+# ---------------------------------------------------------------------------
 
 
 def test_routing_roundtrip_oracle():
@@ -96,65 +105,242 @@ def test_hot_split():
     assert list(np.asarray(cold)) == [-1, 1, -1, -1, 3]
 
 
-@pytest.mark.parametrize("distribution", ["a2a", "allgather"])
+# ---------------------------------------------------------------------------
+# capacity model
+# ---------------------------------------------------------------------------
+
+
+def test_capacity_model():
+    """capacity(): >= 16, multiple of 8, ~factor x uniform mean, <= n."""
+    mesh = make_host_mesh(1, 1)
+    cfg = _cfg()
+    n = 128 * cfg.max_features_per_sample
+    cap = dpmr.capacity(cfg, 128, mesh)
+    assert cap == dpmr.capacity_for_shards(cfg, 128, dpmr.num_shards(mesh))
+    assert cap % 8 == 0 or cap == n
+    assert 16 <= cap <= n
+    # tiny factor clamps to the floor of 16; huge factor clamps to n
+    assert dpmr.capacity(cfg, 128, mesh, factor=1e-9) == 16
+    assert dpmr.capacity(cfg, 128, mesh, factor=1e9) == n
+    # analytic shard counts: capacity shrinks ~1/p
+    c32 = dpmr.capacity_for_shards(cfg, 2048, 32)
+    c256 = dpmr.capacity_for_shards(cfg, 2048, 256)
+    assert c256 < c32
+
+
+@pytest.mark.parametrize("distribution", ["a2a", "psum_scatter"])
+def test_overflow_metric_nonzero_at_tiny_capacity(distribution):
+    """Sparse-forward strategies report dropped uniques through the
+    `overflow` metric when cap_factor is forced tiny, and zero at the
+    default factor."""
+    mesh = make_host_mesh(1, 1)
+    cfg = _cfg(distribution=distribution)
+    batch = sparse_corpus.make_batch(SPEC, 128, 0)
+
+    tiny = DPMREngine(cfg, mesh, cap_factor=1e-9)
+    assert tiny.step_fns(128).capacity == 16
+    m = tiny.train_step(batch)
+    assert m["overflow"] > 0, m
+
+    dflt = DPMREngine(cfg, mesh)
+    m = dflt.train_step(batch)
+    assert m["overflow"] == 0, m
+
+
+def test_overflow_metric_zero_for_allgather():
+    """The ship-the-table strategy has no capacity to overflow."""
+    mesh = make_host_mesh(1, 1)
+    cfg = _cfg(distribution="allgather")
+    batch = sparse_corpus.make_batch(SPEC, 128, 0)
+    m = DPMREngine(cfg, mesh, cap_factor=1e-9).train_step(batch)
+    assert m["overflow"] == 0, m
+
+
+# ---------------------------------------------------------------------------
+# strategy registry
+# ---------------------------------------------------------------------------
+
+
+def test_strategy_registry():
+    assert set(STRATEGIES) <= set(list_strategies())
+    assert get_strategy("a2a").name == "a2a"
+    with pytest.raises(KeyError):
+        get_strategy("nope")
+
+    @register_strategy("test_alias_a2a")
+    class AliasA2A(type(get_strategy("a2a"))):
+        pass
+
+    assert "test_alias_a2a" in list_strategies()
+    assert isinstance(get_strategy("test_alias_a2a"), DistributionStrategy)
+
+
+def test_registered_strategy_trains():
+    """A user-registered strategy is selectable via cfg.distribution."""
+    register_strategy("test_custom", get_strategy("a2a"))
+    mesh = make_host_mesh(1, 1)
+    eng = DPMREngine(_cfg(distribution="test_custom"), mesh)
+    hist = eng.fit_sgd(sparse_corpus.batches(SPEC, 128, 2))
+    assert len(hist) == 2 and np.isfinite(hist[-1]["loss"])
+
+
+# ---------------------------------------------------------------------------
+# engine vs dense oracle / strategy equivalence
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("distribution", STRATEGIES)
 def test_dpmr_matches_dense_oracle(distribution):
     """The full staged pipeline == numpy logistic regression GD."""
     mesh = make_host_mesh(1, 1)
     cfg = _cfg(distribution=distribution, max_hot=16)
     batches = list(sparse_corpus.batches(SPEC, 128, 3))
-    hot = sparse_lr.hot_ids_from_corpus(cfg, batches, mesh)
-    with jax.set_mesh(mesh):
-        out = sparse_lr.dpmr_train(cfg, mesh, lambda: iter(batches), 128,
-                                   hot_ids=hot)
+    hot = hot_ids_from_corpus(cfg, batches, mesh)
+    eng = DPMREngine(cfg, mesh, hot_ids=hot)
+    eng.fit(lambda: iter(batches))
     f = dpmr.padded_features(cfg, mesh)
     oracle = _dense_lr_oracle(batches, f, cfg.learning_rate, cfg.iterations)
     # reassemble full theta: cold + hot written back at hot_ids
-    theta = np.asarray(out["state"].cold).copy()
-    hids = np.asarray(out["state"].hot_ids)
-    hvals = np.asarray(out["state"].hot)
+    theta = np.asarray(eng.state.cold).copy()
+    hids = np.asarray(eng.state.hot_ids)
+    hvals = np.asarray(eng.state.hot)
     real = hids < 2**31 - 1
     theta[hids[real]] = hvals[real]
     np.testing.assert_allclose(theta, oracle, atol=2e-4)
 
 
-def test_a2a_equals_allgather():
+def test_strategies_agree():
+    """All registered built-in strategies produce identical parameters and
+    losses on a 1-device mesh (they only differ in wire bytes)."""
     mesh = make_host_mesh(1, 1)
     batches = list(sparse_corpus.batches(SPEC, 128, 3))
-    outs = {}
-    for dist in ("a2a", "allgather"):
-        cfg = _cfg(distribution=dist)
-        with jax.set_mesh(mesh):
-            outs[dist] = np.asarray(sparse_lr.dpmr_train(
-                cfg, mesh, lambda: iter(batches), 128)["state"].cold)
-    np.testing.assert_allclose(outs["a2a"], outs["allgather"], atol=1e-5)
+    colds, hists = {}, {}
+    for dist in STRATEGIES:
+        eng = DPMREngine(_cfg(distribution=dist), mesh)
+        hists[dist] = [h["loss"] for h in eng.fit(lambda: iter(batches))]
+        colds[dist] = np.asarray(eng.state.cold)
+    for dist in STRATEGIES[1:]:
+        np.testing.assert_allclose(colds[STRATEGIES[0]], colds[dist],
+                                   atol=1e-5)
+        np.testing.assert_allclose(hists[STRATEGIES[0]], hists[dist],
+                                   rtol=1e-6)
 
 
 def test_sgd_training_reduces_loss_and_learns():
     mesh = make_host_mesh(1, 1)
     cfg = _cfg(optimizer="adagrad", learning_rate=2.0)
-    with jax.set_mesh(mesh):
-        out = sparse_lr.dpmr_train_sgd(
-            cfg, mesh, sparse_corpus.batches(SPEC, 256, 40), 256)
-        test = list(sparse_corpus.batches(SPEC, 256, 52, start=50))
-        ev = sparse_lr.evaluate(out["state"], out["fns"], test, mesh)
-    first = np.mean([h["loss"] for h in out["history"][:5]])
-    last = np.mean([h["loss"] for h in out["history"][-5:]])
+    eng = DPMREngine(cfg, mesh)
+    history = eng.fit_sgd(sparse_corpus.batches(SPEC, 256, 40))
+    ev = eng.evaluate(list(sparse_corpus.batches(SPEC, 256, 52, start=50)))
+    first = np.mean([h["loss"] for h in history[:5]])
+    last = np.mean([h["loss"] for h in history[-5:]])
     assert last < first - 0.01, (first, last)
     assert ev["f_avg"] > 0.5, ev
 
 
 def test_classify_probabilities_valid():
     mesh = make_host_mesh(1, 1)
-    cfg = _cfg()
-    with jax.set_mesh(mesh):
-        out = sparse_lr.dpmr_train_sgd(
-            cfg, mesh, sparse_corpus.batches(SPEC, 128, 5), 128)
-        b = sparse_corpus.make_batch(SPEC, 128, seed=777)
-        probs = sparse_lr.dpmr_classify(
-            out["state"], out["fns"], {"ids": b["ids"], "vals": b["vals"]},
-            mesh)
+    eng = DPMREngine(_cfg(), mesh)
+    eng.fit_sgd(sparse_corpus.batches(SPEC, 128, 5))
+    b = sparse_corpus.make_batch(SPEC, 128, seed=777)
+    probs = eng.predict({"ids": b["ids"], "vals": b["vals"]})
     assert probs.shape == (128,)
     assert np.all((probs >= 0) & (probs <= 1))
+
+
+# ---------------------------------------------------------------------------
+# optimizer / schedule registries on the sparse face
+# ---------------------------------------------------------------------------
+
+
+def test_sparse_optimizer_registry():
+    from repro.optim import optimizers
+
+    assert {"sgd", "adagrad", "momentum"} <= set(
+        optimizers.SPARSE_OPTIMIZERS)
+    with pytest.raises(KeyError):
+        optimizers.get_sparse_optimizer("nope")
+    # momentum trains and differs from plain sgd
+    mesh = make_host_mesh(1, 1)
+    batches = list(sparse_corpus.batches(SPEC, 256, 10))
+    colds = {}
+    for opt in ("sgd", "momentum"):
+        eng = DPMREngine(_cfg(optimizer=opt, learning_rate=0.5), mesh)
+        eng.fit_sgd(iter(batches))
+        colds[opt] = np.asarray(eng.state.cold)
+    assert np.max(np.abs(colds["sgd"] - colds["momentum"])) > 1e-7
+
+
+def test_schedule_registry_on_sparse_face():
+    from repro.optim import schedules
+
+    with pytest.raises(KeyError):
+        schedules.get_schedule_by_name("nope", 1.0)
+    mesh = make_host_mesh(1, 1)
+    cfg = _cfg(schedule="warmup_cosine", warmup_steps=2, total_steps=8,
+               learning_rate=1.0)
+    eng = DPMREngine(cfg, mesh)
+    assert eng.learning_rate() == 0.0          # step 0 of warmup
+    hist = eng.fit_sgd(sparse_corpus.batches(SPEC, 256, 8))
+    assert np.isfinite(hist[-1]["loss"])
+    assert eng.learning_rate() < cfg.learning_rate   # cosine decayed
+
+
+# ---------------------------------------------------------------------------
+# checkpointing through the engine
+# ---------------------------------------------------------------------------
+
+
+def test_engine_save_restore_roundtrip(tmp_path):
+    mesh = make_host_mesh(1, 1)
+    cfg = _cfg(optimizer="adagrad", learning_rate=2.0)
+    eng = DPMREngine(cfg, mesh)
+    eng.fit_sgd(sparse_corpus.batches(SPEC, 128, 6))
+    step = eng.save(str(tmp_path))
+    assert step == 6
+
+    eng2 = DPMREngine(cfg, mesh)
+    manifest = eng2.restore(str(tmp_path))
+    assert manifest["extra"]["kind"] == "dpmr_sparse"
+    for a, b in zip(eng.state, eng2.state):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # training continues identically from the restored state
+    batch = sparse_corpus.make_batch(SPEC, 128, seed=99)
+    m1 = eng.train_step(batch)
+    m2 = eng2.train_step(batch)
+    assert m1 == m2
+    np.testing.assert_array_equal(np.asarray(eng.state.cold),
+                                  np.asarray(eng2.state.cold))
+
+
+# ---------------------------------------------------------------------------
+# deprecated fn-dict surface keeps working (one release)
+# ---------------------------------------------------------------------------
+
+
+def test_legacy_sparse_lr_shim():
+    from repro.core import sparse_lr
+
+    mesh = make_host_mesh(1, 1)
+    batches = list(sparse_corpus.batches(SPEC, 128, 2))
+    with pytest.warns(DeprecationWarning):
+        out = sparse_lr.dpmr_train(_cfg(iterations=1), mesh,
+                                   lambda: iter(batches), 128)
+    assert set(out) == {"state", "history", "fns"}
+    with pytest.warns(DeprecationWarning):
+        train_step = out["fns"]["train_step"]       # dict-style access
+    assert callable(train_step)
+    assert out["fns"].num_shards == 1
+    with pytest.warns(DeprecationWarning):
+        probs = sparse_lr.dpmr_classify(
+            out["state"], out["fns"],
+            {k: batches[0][k] for k in ("ids", "vals")}, mesh)
+    assert probs.shape == (128,)
+
+
+# ---------------------------------------------------------------------------
+# kernels / elastic integration
+# ---------------------------------------------------------------------------
 
 
 def test_engine_with_pallas_kernels_matches_jnp():
@@ -162,14 +348,12 @@ def test_engine_with_pallas_kernels_matches_jnp():
     kernel is bit-identical to the jnp oracle path — the kernel is a true
     drop-in for the computeGradients map body."""
     mesh = make_host_mesh(1, 1)
-    cfg = _cfg()
     batches = list(sparse_corpus.batches(SPEC, 128, 3))
     outs = {}
     for impl in ("jnp", "pallas_interpret"):
-        with jax.set_mesh(mesh):
-            outs[impl] = np.asarray(sparse_lr.dpmr_train(
-                cfg, mesh, lambda: iter(batches), 128,
-                kernel_impl=impl)["state"].cold)
+        eng = DPMREngine(_cfg(), mesh, kernel_impl=impl)
+        eng.fit(lambda: iter(batches))
+        outs[impl] = np.asarray(eng.state.cold)
     np.testing.assert_array_equal(outs["jnp"], outs["pallas_interpret"])
 
 
@@ -202,11 +386,8 @@ def test_elastic_reshard_roundtrip():
     from repro.runtime.elastic import reshard_dpmr_state
 
     mesh = make_host_mesh(1, 1)
-    cfg = _cfg()
-    with jax.set_mesh(mesh):
-        out = sparse_lr.dpmr_train_sgd(
-            cfg, mesh, sparse_corpus.batches(SPEC, 128, 3), 128)
-    state = out["state"]
-    state2 = reshard_dpmr_state(state, cfg, mesh)
-    np.testing.assert_array_equal(np.asarray(state.cold),
+    eng = DPMREngine(_cfg(), mesh)
+    eng.fit_sgd(sparse_corpus.batches(SPEC, 128, 3))
+    state2 = reshard_dpmr_state(eng.state, eng.cfg, mesh)
+    np.testing.assert_array_equal(np.asarray(eng.state.cold),
                                   np.asarray(state2.cold))

@@ -12,6 +12,9 @@ import sys
 
 import pytest
 
+# every test here re-inits jax in a subprocess with 8 fake devices — minutes
+pytestmark = pytest.mark.slow
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -28,6 +31,7 @@ def run_py(body: str, devices: int = 8, timeout: int = 600) -> dict:
 COMMON = """
 import json
 import jax, jax.numpy as jnp, numpy as np
+from repro import compat
 from repro.launch.mesh import make_host_mesh
 """
 
@@ -47,7 +51,7 @@ losses = {}
 for (d, m) in [(1,1),(4,2),(2,4)]:
     mesh = make_host_mesh(d, m)
     pc = ParallelConfig(microbatches=2)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         state = trainer.init_state(spec, cfg, tc, pc, jax.random.PRNGKey(0))
         step = jax.jit(trainer.make_train_step(spec, cfg, tc, pc, mesh))
         ds = LMDataset(LMDataConfig(cfg.vocab_size, 16, 8))
@@ -62,8 +66,8 @@ print(json.dumps(losses))
 
 def test_dpmr_multi_shard_matches_single():
     out = run_py(COMMON + """
+from repro.api import DPMREngine, hot_ids_from_corpus
 from repro.configs.base import DPMRConfig
-from repro.core import sparse_lr
 from repro.data import sparse_corpus
 
 spec = sparse_corpus.CorpusSpec(num_features=1<<12,
@@ -75,11 +79,10 @@ batches = list(sparse_corpus.batches(spec, 256, 4))
 colds = {}
 for (d, m) in [(1,1),(4,2)]:
     mesh = make_host_mesh(d, m)
-    hot = sparse_lr.hot_ids_from_corpus(cfg, batches, mesh)
-    with jax.set_mesh(mesh):
-        out = sparse_lr.dpmr_train(cfg, mesh, lambda: iter(batches), 256,
-                                   hot_ids=hot)
-    colds[f"{d}x{m}"] = np.asarray(out["state"].cold)
+    hot = hot_ids_from_corpus(cfg, batches, mesh)
+    eng = DPMREngine(cfg, mesh, hot_ids=hot)
+    eng.fit(lambda: iter(batches))
+    colds[f"{d}x{m}"] = np.asarray(eng.state.cold)
 diff = float(np.max(np.abs(colds["1x1"] - colds["4x2"])))
 print(json.dumps({"max_diff": diff}))
 """)
@@ -100,15 +103,15 @@ w = jnp.asarray(rng.normal(size=(D, F)), jnp.float32)
 x = jnp.asarray(rng.normal(size=(B, D)), jnp.float32)
 
 def staged(w, x):
-    f = jax.shard_map(lambda ws, xs: dpmr_dense_linear(ws, xs, "data"),
-                      mesh=mesh, in_specs=(P("data", None), P()),
-                      out_specs=P(), check_vma=False)
+    f = compat.shard_map(lambda ws, xs: dpmr_dense_linear(ws, xs, "data"),
+                         mesh=mesh, in_specs=(P("data", None), P()),
+                         out_specs=P(), check_vma=False)
     return f(w, x)
 
 def loss_staged(w, x): return jnp.sum(jnp.sin(staged(w, x)))
 def loss_plain(w, x): return jnp.sum(jnp.sin(x @ w))
 
-with jax.set_mesh(mesh):
+with compat.set_mesh(mesh):
     y1 = staged(w, x)
     g1 = jax.grad(loss_staged)(w, x)
 y2 = x @ w
@@ -133,10 +136,9 @@ spec = registry.get_spec("yi-6b")
 tc = TrainConfig(learning_rate=1e-2, warmup_steps=0, total_steps=20)
 
 def run(compress):
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*3)
+    mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
     pc = ParallelConfig(compress_pod_grads=compress)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         state = trainer.init_state(spec, cfg, tc, pc, jax.random.PRNGKey(0))
         step = jax.jit(trainer.make_train_step(spec, cfg, tc, pc, mesh))
         ds = LMDataset(LMDataConfig(cfg.vocab_size, 16, 8))
@@ -161,7 +163,7 @@ q = jnp.asarray(rng.normal(size=(b,s,h,d)), jnp.float32)
 k = jnp.asarray(rng.normal(size=(b,s,kh,d)), jnp.float32)
 v = jnp.asarray(rng.normal(size=(b,s,kh,d)), jnp.float32)
 res = {}
-with jax.set_mesh(mesh):
+with compat.set_mesh(mesh):
     for causal, window in [(True,0),(True,16),(False,0)]:
         cp = jax.jit(lambda q,k,v: layers.context_parallel_attention(
             q,k,v,causal=causal,window=window,kv_block=16))(q,k,v)
@@ -193,7 +195,7 @@ res = {}
 for mode in ("auto", "cp"):
     mesh = make_host_mesh(2, 4)
     pc = ParallelConfig(attn_mode=mode)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         state = trainer.init_state(spec, cfg, tc, pc, jax.random.PRNGKey(0))
         step = jax.jit(trainer.make_train_step(spec, cfg, tc, pc, mesh))
         ds = LMDataset(LMDataConfig(cfg.vocab_size, 16, 8))
@@ -213,15 +215,14 @@ from repro.train import trainer
 from repro.configs.base import TrainConfig, ParallelConfig
 from repro.data.pipeline import LMDataset, LMDataConfig, encdec_batch
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*3)
+mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
 res = {}
 for arch in ["granite-8b", "mixtral-8x22b", "zamba2-2.7b", "whisper-small"]:
     cfg = registry.smoke_config(arch)
     spec = registry.get_spec(arch)
     tc = TrainConfig(learning_rate=1e-2, warmup_steps=0, total_steps=5)
     pc = ParallelConfig()
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         state = trainer.init_state(spec, cfg, tc, pc, jax.random.PRNGKey(0))
         step = jax.jit(trainer.make_train_step(spec, cfg, tc, pc, mesh))
         ds = LMDataset(LMDataConfig(cfg.vocab_size, 16, 8))

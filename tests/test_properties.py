@@ -2,6 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")   # don't abort collection without it
+
 from hypothesis import given, settings, strategies as st
 
 from repro.core import hot_sharding, sparse

@@ -2,15 +2,18 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
+from repro import compat
+from repro.api import DPMREngine, hot_ids_from_corpus
 from repro.configs import ARCH_IDS, SHAPES
 from repro.configs.base import DPMRConfig
-from repro.core import sparse_lr
 from repro.data import sparse_corpus
 from repro.launch.mesh import make_host_mesh
 from repro.models import registry
 
 
+@pytest.mark.slow
 def test_paper_pipeline_end_to_end():
     """Algorithm 8 (train) + Algorithm 9 (classify): the full loop improves
     F over the majority-class baseline — the paper's Fig. 1 behaviour."""
@@ -23,16 +26,15 @@ def test_paper_pipeline_end_to_end():
     mesh = make_host_mesh(1, 1)
     train = lambda: sparse_corpus.batches(spec, 512, 8)
     test = list(sparse_corpus.batches(spec, 512, 52, start=50))
-    hot = sparse_lr.hot_ids_from_corpus(cfg, train(), mesh)
+    hot = hot_ids_from_corpus(cfg, train(), mesh)
     evals = []
 
-    def ev(state, fns):
-        m = sparse_lr.evaluate(state, fns, test, mesh)
+    def ev(engine):
+        m = engine.evaluate(test)
         evals.append(m)
         return m
 
-    with jax.set_mesh(mesh):
-        sparse_lr.dpmr_train(cfg, mesh, train, 512, hot_ids=hot, eval_fn=ev)
+    DPMREngine(cfg, mesh, hot_ids=hot).fit(train, eval_fn=ev)
     # converging: last F beats first F, and both classes predicted
     assert evals[-1]["f_avg"] > evals[0]["f_avg"]
     assert evals[-1]["f_pos"] > 0.6 and evals[-1]["f_neg"] > 0.3, evals[-1]
@@ -59,7 +61,7 @@ def test_serve_greedy_decode_runs():
     mesh = make_host_mesh(1, 1)
     cfg = registry.smoke_config("yi-6b")
     spec = registry.get_spec("yi-6b")
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         state = trainer.init_state(spec, cfg, TrainConfig(optimizer="sgd"),
                                    ParallelConfig(), jax.random.PRNGKey(0))
         batch = {"tokens": jnp.ones((2, 8), jnp.int32)}
