@@ -6,30 +6,31 @@ biased toward the majority class, iteration 2 the refinement). We reproduce
 the same curve shape on the synthetic Zipf corpus: majority class first,
 minority class catching up, both converging toward the Bayes ceiling of the
 generator. Reported: cate+1, cate-1 and avg for P, R, F per iteration —
-exactly the paper's panels. Runs through `DPMREngine`; run()'s
-`distribution` arg selects any registered strategy.
+exactly the paper's panels. Runs through `DPMREngine` and the `repro.data`
+loader plane; run()'s `distribution` arg selects any registered strategy.
 """
 from __future__ import annotations
 
-from repro.api import DPMREngine, hot_ids_from_corpus
+from repro.api import (DPMREngine, ShardedLoader, get_source,
+                       hot_ids_from_corpus)
 from repro.configs.base import DPMRConfig
-from repro.data import sparse_corpus
 from repro.launch.mesh import make_host_mesh
 
 
 def run(iterations: int = 8, optimizer: str = "adagrad", lr: float = 2.0,
         features: int = 1 << 14, distribution: str = "a2a"):
-    spec = sparse_corpus.CorpusSpec(num_features=features,
-                                    features_per_sample=32,
-                                    signal_features=512, seed=0)
+    corpus = dict(num_features=features, features_per_sample=32,
+                  signal_features=512, seed=0)
     cfg = DPMRConfig(num_features=features, max_features_per_sample=32,
                      iterations=iterations, learning_rate=lr,
                      max_hot=64, optimizer=optimizer,
                      distribution=distribution)
     mesh = make_host_mesh(1, 1)
-    train = lambda: sparse_corpus.batches(spec, 512, 8)
-    test = list(sparse_corpus.batches(spec, 512, 54, start=50))
-    hot = hot_ids_from_corpus(cfg, train(), mesh)
+    train = ShardedLoader(get_source("zipf_sparse", batch_size=512,
+                                     num_batches=8, **corpus), mesh)
+    test = ShardedLoader(get_source("zipf_sparse", batch_size=512,
+                                    num_batches=4, start=50, **corpus), mesh)
+    hot = hot_ids_from_corpus(cfg, train.source.iter_batches(), mesh)
 
     engine = DPMREngine(cfg, mesh, hot_ids=hot)
     return engine.fit(train, eval_fn=lambda e: e.evaluate(test))

@@ -68,20 +68,28 @@ def bench_a2a_vs_allgather():
 
 def bench_dpmr_step():
     """Wall time of one DPMR SGD step (CPU, relative use only)."""
-    from repro.api import DPMREngine
+    from repro.api import DPMREngine, get_source
     from repro.configs.base import DPMRConfig
-    from repro.data import sparse_corpus
     from repro.launch.mesh import make_host_mesh
 
-    spec = sparse_corpus.CorpusSpec(num_features=1 << 16,
-                                    features_per_sample=32)
+    src = get_source("zipf_sparse", batch_size=1024, num_features=1 << 16,
+                     features_per_sample=32)
     cfg = DPMRConfig(num_features=1 << 16, max_features_per_sample=32)
     engine = DPMREngine(cfg, make_host_mesh(1, 1))
     fns = engine.step_fns(1024)
-    b = engine.put_batch(sparse_corpus.make_batch(spec, 1024, 0))
+    b = engine.put_batch(src.batch(0))
     us = _time_us(lambda: fns.train_step(engine.state, b))
     print(f"dpmr_sgd_step_b1024,{us:.0f},tokens_per_s="
           f"{1024 / (us / 1e6):.0f}")
+
+
+def bench_input_pipeline():
+    """Loader throughput + prefetch overlap (see benchmarks/input_pipeline)."""
+    from benchmarks import input_pipeline
+
+    res = input_pipeline.run(quick=True, write_json=False)
+    print(f"input_pipeline,0,overlap_speedup="
+          f"{res['fit_sgd']['speedup']:.2f}x")
 
 
 def bench_kernels():
@@ -112,7 +120,7 @@ def bench_kernels():
 def bench_train_step():
     """Smoke-scale LM train step wall time (CPU)."""
     from repro.configs.base import ParallelConfig, TrainConfig
-    from repro.data.pipeline import LMDataConfig, LMDataset
+    from repro.data import get_source
     from repro.launch.mesh import make_host_mesh
     from repro.models import registry
     from repro.train import trainer
@@ -127,8 +135,9 @@ def bench_train_step():
     with compat.set_mesh(mesh):
         state = trainer.init_state(spec, cfg, tc, pc, jax.random.PRNGKey(0))
         step = jax.jit(trainer.make_train_step(spec, cfg, tc, pc, mesh))
-        ds = LMDataset(LMDataConfig(cfg.vocab_size, 64, 8))
-        b = jax.tree.map(jnp.asarray, ds.batch(0))
+        src = get_source("lm_markov", vocab_size=cfg.vocab_size, seq_len=64,
+                         batch_size=8)
+        b = jax.tree.map(jnp.asarray, src.batch(0))
         us = _time_us(lambda: step(state, b))
     toks = 8 * 64
     print(f"lm_train_step_smoke,{us:.0f},tokens_per_s={toks/(us/1e6):.0f}")
@@ -160,6 +169,7 @@ def main() -> None:
     bench_sec4_hot_sharding()
     bench_a2a_vs_allgather()
     bench_dpmr_step()
+    bench_input_pipeline()
     bench_kernels()
     bench_train_step()
     bench_roofline()

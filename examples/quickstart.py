@@ -1,36 +1,40 @@
 """Quickstart: train + classify distributed sparse logistic regression with
 Distributed Parameter Map-Reduce (the paper's Algorithm 8 + 9) through the
-typed `DPMREngine` façade, in ~25 lines.
+typed `DPMREngine` façade and the `repro.data` plane, in ~25 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-from repro.api import DPMREngine, hot_ids_from_corpus, list_strategies
+from repro.api import (DPMREngine, ShardedLoader, get_source,
+                       hot_ids_from_corpus, list_sources, list_strategies)
 from repro.configs.base import DPMRConfig
-from repro.data import sparse_corpus
 from repro.launch.mesh import make_host_mesh
 
 # a Zipf-distributed sparse corpus (the paper's CTR-log regime, scaled down)
-corpus = sparse_corpus.CorpusSpec(num_features=1 << 14,
-                                  features_per_sample=32,
-                                  signal_features=512)
+corpus = dict(num_features=1 << 14, features_per_sample=32,
+              signal_features=512)
 cfg = DPMRConfig(num_features=1 << 14, max_features_per_sample=32,
                  iterations=6, learning_rate=2.0, max_hot=64,
                  optimizer="adagrad")     # distribution="a2a" is the default;
 #                                          any name in list_strategies() works
 
 mesh = make_host_mesh(1, 1)   # every device = one DPMR node (samples+params)
-train_batches = lambda: sparse_corpus.batches(corpus, 512, 8)
-test_batches = list(sparse_corpus.batches(corpus, 512, 54, start=50))
+# data plane: named sources behind prefetching, cursor-resumable loaders
+train = ShardedLoader(get_source("zipf_sparse", batch_size=512,
+                                 num_batches=8, **corpus), mesh)
+test = ShardedLoader(get_source("zipf_sparse", batch_size=512, num_batches=4,
+                                start=50, **corpus), mesh)
 
 # initParameters-time frequency stats -> replicated Zipf head (paper sec. 4)
-hot = hot_ids_from_corpus(cfg, train_batches(), mesh)
+hot = hot_ids_from_corpus(cfg, train.source.iter_batches(), mesh)
 
 engine = DPMREngine(cfg, mesh, hot_ids=hot)
-history = engine.fit(train_batches)
-metrics = engine.evaluate(test_batches)
+history = engine.fit(train)         # one loader epoch per paper iteration
+metrics = engine.evaluate(test)
 
 print("strategies available:", list_strategies())
+print("data sources available:", list_sources())
 print("loss per iteration:", [round(h["loss"], 4) for h in history])
+print("train cursor after fit:", train.cursor)
 print("test metrics:", {k: round(v, 3) for k, v in metrics.items()})
 assert metrics["f_avg"] > 0.5
 print("OK - DPMR trained and classified on a", mesh.shape, "mesh")

@@ -1,7 +1,9 @@
 """Batched serving example: prefill a prompt batch, then greedy-decode.
 
 Exercises the production serve path (prefill -> KV/state cache -> decode
-steps) for a dense, an SSM, and an MoE architecture.
+steps) for a dense, an SSM, and an MoE architecture. Prompt batches come
+from the `repro.data` plane (`lm_markov` source behind a ShardedLoader), so
+the serve path consumes the same loader abstraction the trainers do.
 
     PYTHONPATH=src python examples/serve_batched.py
     PYTHONPATH=src python examples/serve_batched.py --no-smoke \
@@ -16,6 +18,7 @@ import numpy as np
 
 from repro import compat
 from repro.configs.base import ParallelConfig, TrainConfig
+from repro.data import ShardedLoader, get_source
 from repro.launch.mesh import make_host_mesh
 from repro.models import registry
 from repro.train import serve, trainer
@@ -34,23 +37,26 @@ def main():
     args = ap.parse_args()
 
     mesh = make_host_mesh(1, 1)
-    rng = np.random.default_rng(0)
 
     for arch in args.archs:
         cfg = registry.smoke_config(arch) if args.smoke else \
             registry.get_spec(arch).cfg
         spec = registry.get_spec(arch)
+        # prompts through the data plane: one loader batch per arch
+        prompts = ShardedLoader(
+            get_source("lm_markov", vocab_size=cfg.vocab_size,
+                       seq_len=args.prompt_len, batch_size=args.batch,
+                       encdec_d_model=(cfg.d_model if cfg.family == "encdec"
+                                       else 0)),
+            mesh, placement="device", prefetch=0)
         with compat.set_mesh(mesh):
             state = trainer.init_state(spec, cfg,
                                        TrainConfig(optimizer="sgd"),
                                        ParallelConfig(), jax.random.PRNGKey(1))
-            batch = {"tokens": jnp.asarray(
-                rng.integers(0, cfg.vocab_size,
-                             size=(args.batch, args.prompt_len)), jnp.int32)}
+            lm_batch = next(iter(prompts.batches(1)))
+            batch = {"tokens": lm_batch["tokens"]}
             if cfg.family == "encdec":
-                batch["frames"] = jnp.asarray(
-                    rng.normal(size=(args.batch, args.prompt_len,
-                                     cfg.d_model)), jnp.float32)
+                batch["frames"] = lm_batch["frames"]
             t0 = time.time()
             toks = serve.greedy_decode(spec, cfg, state["params"], batch,
                                        args.decode_steps,

@@ -15,9 +15,9 @@ checkpoint story.
 import argparse
 import time
 
-from repro.api import DPMREngine, hot_ids_from_corpus, list_strategies
+from repro.api import (DPMREngine, ShardedLoader, get_source,
+                       hot_ids_from_corpus, list_strategies)
 from repro.configs.base import DPMRConfig
-from repro.data import sparse_corpus
 from repro.launch.mesh import make_host_mesh
 
 
@@ -29,27 +29,34 @@ def main():
     ap.add_argument("--batch", type=int, default=4096)
     ap.add_argument("--distribution", default="a2a",
                     choices=list_strategies())
+    ap.add_argument("--prefetch", type=int, default=2,
+                    help="loader prefetch depth (0 = synchronous input)")
     ap.add_argument("--ckpt", default="",
                     help="save the trained sparse state here")
     args = ap.parse_args()
 
     f = 1 << args.log2_features
-    corpus = sparse_corpus.CorpusSpec(num_features=f,
-                                      features_per_sample=64,
-                                      signal_features=4096)
+    corpus = dict(num_features=f, features_per_sample=64,
+                  signal_features=4096)
     cfg = DPMRConfig(num_features=f, max_features_per_sample=64,
                      learning_rate=2.0, max_hot=512, optimizer="adagrad",
                      distribution=args.distribution)
     mesh = make_host_mesh(1, 1)
 
-    hot = hot_ids_from_corpus(
-        cfg, sparse_corpus.batches(corpus, args.batch, 4), mesh)
+    # data plane: an unbounded synthetic stream behind a prefetching loader
+    # (batch synthesis + device placement overlap the training step)
+    train = ShardedLoader(
+        get_source("zipf_sparse", batch_size=args.batch, **corpus),
+        mesh, prefetch=args.prefetch)
+    test = ShardedLoader(
+        get_source("zipf_sparse", batch_size=args.batch, num_batches=3,
+                   start=1000, **corpus), mesh)
+
+    hot = hot_ids_from_corpus(cfg, train.source.iter_batches(limit=4), mesh)
     engine = DPMREngine(cfg, mesh, hot_ids=hot)
 
     t0 = time.time()
-    history = engine.fit_sgd(
-        sparse_corpus.batches(corpus, args.batch, args.steps))
-    test = list(sparse_corpus.batches(corpus, args.batch, 1003, start=1000))
+    history = engine.fit_sgd(train, steps=args.steps)
     metrics = engine.evaluate(test)
     dt = time.time() - t0
 

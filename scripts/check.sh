@@ -11,18 +11,24 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== compileall =="
 python -m compileall -q src benchmarks examples tests
 
-echo "== strategy-registry / engine smoke =="
+echo "== strategy/source-registry / engine smoke =="
 python -c "
 from repro.api import DPMREngine, list_strategies, get_strategy
 names = list_strategies()
 assert {'a2a', 'allgather', 'psum_scatter'} <= set(names), names
 for n in names:
     get_strategy(n)
+from repro.data import list_sources, get_source
+snames = list_sources()
+assert {'zipf_sparse', 'lm_markov', 'file_sparse'} <= set(snames), snames
 from repro.optim import optimizers, schedules
 assert {'sgd', 'adagrad', 'momentum'} <= set(optimizers.SPARSE_OPTIMIZERS)
 assert {'constant', 'warmup_cosine'} <= set(schedules.SCHEDULES)
-print('registries OK:', names)
+print('registries OK:', names, snames)
 "
+
+echo "== quickstart smoke (engine + data plane end to end) =="
+python examples/quickstart.py
 
 echo "== tier-1 tests (fast; -m 'not slow') =="
 python -m pytest -x -q -m "not slow"

@@ -4,14 +4,25 @@
 
 `DPMREngine` is the façade (state + compiled StepFns + batch placement +
 checkpointing); the strategy registry makes the parameter-distribution
-shuffle a pluggable component. The legacy fn-dict surfaces in
-`repro.core.api` / `repro.core.sparse_lr` delegate here and will be removed
-after one release.
+shuffle a pluggable component, and the data plane (`repro.data`, re-exported
+here) does the same for the input face: `fit`/`fit_sgd`/`evaluate` accept a
+`ShardedLoader` or a registered source name + spec. The legacy fn-dict
+surfaces (`core.sparse_lr`, `fns["..."]` access) were removed after their
+one-release deprecation — migration table in CHANGES.md.
 """
 from repro.api.engine import (
     DPMREngine,
     hot_ids_from_corpus,
     put_batch,
+)
+from repro.data import (
+    Cursor,
+    DataSource,
+    ShardedLoader,
+    get_source,
+    list_sources,
+    register_source,
+    write_file_corpus,
 )
 from repro.api.strategies import (
     AllGatherStrategy,
@@ -26,8 +37,10 @@ from repro.api.strategies import (
 from repro.core.dpmr import DPMRState, StepFns, init_state, make_step_fns
 
 __all__ = [
-    "AllGatherStrategy", "AllToAllStrategy", "DPMREngine", "DPMRState",
-    "DistributionStrategy", "PsumScatterStrategy", "StepFns",
-    "StrategyContext", "get_strategy", "hot_ids_from_corpus", "init_state",
-    "list_strategies", "make_step_fns", "put_batch", "register_strategy",
+    "AllGatherStrategy", "AllToAllStrategy", "Cursor", "DPMREngine",
+    "DPMRState", "DataSource", "DistributionStrategy", "PsumScatterStrategy",
+    "ShardedLoader", "StepFns", "StrategyContext", "get_source",
+    "get_strategy", "hot_ids_from_corpus", "init_state", "list_sources",
+    "list_strategies", "make_step_fns", "put_batch", "register_source",
+    "register_strategy", "write_file_corpus",
 ]

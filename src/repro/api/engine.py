@@ -7,47 +7,62 @@ and the checkpoint story:
     from repro.api import DPMREngine
 
     eng = DPMREngine(cfg, mesh, hot_ids=hot)
-    eng.fit_sgd(batches)                   # minibatch SGD
+    eng.fit_sgd(batches, steps=100)        # minibatch SGD
     eng.fit(batch_iter_fn)                 # paper-regime full-batch GD
     probs = eng.predict(batch)
     metrics = eng.evaluate(test_batches)
     eng.save("/ckpt/dir"); eng.restore("/ckpt/dir")
 
-Step functions are compiled lazily per global batch size and cached, so one
-engine serves training and differently-sized eval batches. The distribution
+The data arguments of `fit` / `fit_sgd` / `evaluate` accept, besides plain
+iterables, anything from the `repro.data` plane: a `ShardedLoader`, a
+`DataSource`, or a registered source name + spec kwargs —
+
+    eng.fit_sgd("zipf_sparse", steps=40,
+                spec=dict(batch_size=512, num_features=1 << 14))
+
+A loader's resumable cursor rides along in `save()` / `restore()` extras, so
+a restored engine + loader continues the exact batch stream an uninterrupted
+run would have seen.
+
+Step functions are compiled lazily per global batch size and LRU-cached
+(`max_cached_fns`), so one engine serves training and differently-sized eval
+batches without retaining every compilation forever. The distribution
 strategy (`cfg.distribution`) is resolved through the registry in
 `repro.api.strategies`.
 """
 from __future__ import annotations
 
+import itertools
+import warnings
 from typing import Callable, Dict, Iterable, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
 from repro.ckpt.checkpointer import Checkpointer
 from repro.configs.base import DPMRConfig
 from repro.core import dpmr, hot_sharding
 from repro.core.dpmr import StepFns
+from repro.data import DataSource, ShardedLoader, get_source
+from repro.data.loader import put_sharded
 
 
 def put_batch(batch: dict, mesh) -> dict:
-    """Host→device placement: every batch leaf sharded over all mesh axes."""
-    axes = tuple(mesh.axis_names)
-    sharding = NamedSharding(mesh, P(axes))
-    return {k: jax.device_put(jnp.asarray(v), sharding)
-            for k, v in batch.items()}
+    """Host→device placement: every batch leaf sharded over all mesh axes.
+
+    Delegates to `repro.data.loader.put_sharded` — the single definition the
+    ShardedLoader's "sharded" placement also uses — so leaves a loader
+    already placed pass through untouched."""
+    return put_sharded(batch, mesh)
 
 
 def binary_prf_metrics(predict_fn: Callable[[dict], np.ndarray],
                        test_batches: Iterable[dict]) -> Dict:
     """Fig. 1 metrics: per-class precision/recall/F + macro average.
 
-    `predict_fn(batch) -> probs`; batches must carry "labels". Shared by
-    DPMREngine.evaluate and the deprecated sparse_lr.evaluate shim.
+    `predict_fn(batch) -> probs`; batches must carry "labels".
     """
     tp = fp = fn_ = tn = 0
     for batch in test_batches:
@@ -99,16 +114,24 @@ class DPMREngine:
     hot_ids:     replicated Zipf-head ids (see `hot_ids_from_corpus`); None
                  disables hot replication
     state:       resume from an existing DPMRState instead of zeros
+    max_cached_fns: LRU bound on the per-batch-size StepFns cache (bucketed
+                 serving traffic would otherwise compile and retain one
+                 entry per distinct batch size forever)
     """
 
     def __init__(self, cfg: DPMRConfig, mesh, *, kernel_impl: str = "jnp",
                  cap_factor: float = 4.0, hot_ids=None,
-                 state: Optional[dpmr.DPMRState] = None):
+                 state: Optional[dpmr.DPMRState] = None,
+                 max_cached_fns: int = 8):
         self.cfg = cfg
         self.mesh = mesh
         self.kernel_impl = kernel_impl
         self.cap_factor = cap_factor
+        if max_cached_fns < 1:
+            raise ValueError(f"max_cached_fns must be >= 1: {max_cached_fns}")
+        self.max_cached_fns = max_cached_fns
         self._fns: Dict[int, StepFns] = {}
+        self._loader: Optional[ShardedLoader] = None
         self._schedule = dpmr.make_schedule(cfg)
         with compat.set_mesh(mesh):
             self.state = state if state is not None else dpmr.init_state(
@@ -117,7 +140,7 @@ class DPMREngine:
     # -- step-function compilation cache ------------------------------------
 
     def step_fns(self, batch_size: int) -> StepFns:
-        """Compiled StepFns for a given GLOBAL batch size (cached)."""
+        """Compiled StepFns for a given GLOBAL batch size (LRU-cached)."""
         fns = self._fns.pop(batch_size, None)
         if fns is None:
             with compat.set_mesh(self.mesh):
@@ -126,6 +149,8 @@ class DPMREngine:
                     kernel_impl=self.kernel_impl,
                     cap_factor=self.cap_factor)
         self._fns[batch_size] = fns     # move to the end: most recently used
+        while len(self._fns) > self.max_cached_fns:
+            self._fns.pop(next(iter(self._fns)))     # evict least recent
         return fns
 
     @property
@@ -143,6 +168,36 @@ class DPMREngine:
         """Schedule value at the current step."""
         return float(self._schedule(jnp.asarray(self.state.step)))
 
+    # -- data-plane resolution ----------------------------------------------
+
+    def _as_loader(self, data, spec: Optional[Dict]) -> \
+            Optional[ShardedLoader]:
+        """Normalize a data argument to a ShardedLoader when it comes from
+        the data plane (loader | DataSource | registered source name);
+        returns None for plain iterables/callables."""
+        # engine-built loaders are pinned to a single stream (host 0 of 1):
+        # every process must place identical global batches under the mesh
+        # sharding; per-host disjoint shards need global-array placement —
+        # build your own ShardedLoader for that (cf. launch/train.make_loader)
+        if isinstance(data, str):
+            return ShardedLoader(get_source(data, **(spec or {})), self.mesh,
+                                 host_index=0, num_hosts=1)
+        if spec is not None:
+            # anything non-str never reads spec — dropping it silently would
+            # train on a differently-configured source than the caller asked
+            raise TypeError("spec= is only meaningful with a source NAME; "
+                            f"got {type(data).__name__} — configure the "
+                            "source/loader directly instead")
+        if isinstance(data, ShardedLoader):
+            return data
+        # duck-typed sources count too: register_source only requires
+        # batch(index) / batch_size / num_batches, not the base class
+        if isinstance(data, DataSource) or (
+                hasattr(data, "batch") and hasattr(data, "batch_size")
+                and hasattr(data, "num_batches")):
+            return ShardedLoader(data, self.mesh, host_index=0, num_hosts=1)
+        return None
+
     # -- training -----------------------------------------------------------
 
     def train_step(self, batch: dict) -> Dict:
@@ -154,21 +209,58 @@ class DPMREngine:
         return {"loss": float(m["loss"]), "accuracy": float(m["accuracy"]),
                 "overflow": int(m["overflow"])}
 
-    def fit_sgd(self, batches: Iterable[dict]) -> List[Dict]:
-        """Minibatch SGD (one update per batch); returns the history."""
+    def fit_sgd(self, data, steps: Optional[int] = None, *,
+                spec: Optional[Dict] = None) -> List[Dict]:
+        """Minibatch SGD (one update per batch); returns the history.
+
+        `data`: iterable of batches, a `ShardedLoader`, a `DataSource`, or a
+        registered source name (+ `spec` kwargs). With a loader, batches
+        arrive prefetched/pre-placed and its cursor tracks progress for
+        exact resume; `steps` bounds the number of updates. `steps=None` on
+        a bounded loader trains the remainder of the current epoch (one
+        corpus pass, the legacy generator behaviour); on an unbounded one
+        it is an error rather than an infinite loop."""
+        loader = self._as_loader(data, spec)
+        if loader is not None:
+            self._loader = loader
+            if steps is None and loader.steps_per_epoch is None:
+                raise ValueError(
+                    "fit_sgd over an unbounded loader needs steps= (or give "
+                    "the loader an epoch_size)")
+            batches = loader.batches(steps) if steps is not None \
+                else loader.epoch()
+        else:
+            batches = iter(data) if steps is None else \
+                itertools.islice(iter(data), steps)
         history: List[Dict] = []
+        base = int(self.state.step)   # continue numbering across resumes
         for i, batch in enumerate(batches):
             m = self.train_step(batch)
-            history.append({"step": i + 1, **m})
+            history.append({"step": base + i + 1, **m})
         return history
 
-    def fit(self, batch_iter_fn: Callable[[], Iterable[dict]],
-            iterations: Optional[int] = None,
-            eval_fn: Optional[Callable[["DPMREngine"], Dict]] = None
-            ) -> List[Dict]:
+    def fit(self, data, iterations: Optional[int] = None,
+            eval_fn: Optional[Callable[["DPMREngine"], Dict]] = None, *,
+            spec: Optional[Dict] = None) -> List[Dict]:
         """Full-batch gradient descent: one update per ITERATION over the
-        whole corpus (the paper's regime). `batch_iter_fn()` yields the
-        training corpus in fixed-size batches each time it is called."""
+        whole corpus (the paper's regime).
+
+        `data`: a callable yielding the corpus in fixed-size batches each
+        time it is called (legacy `batch_iter_fn`), or a `ShardedLoader` /
+        `DataSource` / source name (+ `spec`) — then each iteration consumes
+        one FULL loader epoch (a mid-epoch cursor is rewound to its epoch
+        start, so every update averages the whole corpus as the paper
+        regime requires; the cursor's epoch field counts iterations)."""
+        loader = self._as_loader(data, spec)
+        if loader is not None:
+            self._loader = loader
+            batch_iter_fn = lambda: loader.epoch(from_start=True)  # noqa: E731
+        elif callable(data):
+            batch_iter_fn = data
+        else:
+            raise TypeError(
+                "fit() needs a batch_iter_fn callable, a ShardedLoader, a "
+                f"DataSource, or a source name; got {type(data).__name__}")
         iterations = self.cfg.iterations if iterations is None else iterations
         history: List[Dict] = []
         for it in range(iterations):
@@ -186,6 +278,11 @@ class DPMREngine:
                     tot_loss += float(m["loss"])
                     tot_acc += float(m["accuracy"])
                     nb += 1
+                if nb == 0:
+                    raise ValueError(
+                        "fit(): the corpus yielded no batches in iteration "
+                        f"{it + 1} — an empty batch_iter_fn()/loader epoch "
+                        "cannot produce an update")
                 self.state = fns.apply_update(
                     self.state, acc_cold / nb, acc_hot / nb,
                     self.learning_rate())
@@ -206,30 +303,71 @@ class DPMREngine:
                 {k: batch[k] for k in ("ids", "vals")}))
         return np.asarray(probs)
 
-    def evaluate(self, test_batches: Iterable[dict]) -> Dict:
-        """Fig. 1 metrics: per-class precision/recall/F + macro average."""
-        return binary_prf_metrics(self.predict, test_batches)
+    def evaluate(self, test_batches, *, spec: Optional[Dict] = None) -> Dict:
+        """Fig. 1 metrics: per-class precision/recall/F + macro average.
+
+        `test_batches`: iterable of batches, or a `ShardedLoader` /
+        `DataSource` / source name (+ `spec`) — then one full epoch of the
+        test source is scored, and the loader's cursor is left exactly
+        where it was (repeatable, and safe on a training loader whose
+        resume position save() will persist)."""
+        loader = self._as_loader(test_batches, spec)
+        if loader is None:
+            return binary_prf_metrics(self.predict, test_batches)
+        mark = loader.cursor
+        try:
+            return binary_prf_metrics(self.predict,
+                                      loader.epoch(from_start=True))
+        finally:
+            loader.seek(mark)
 
     # -- checkpointing -------------------------------------------------------
 
-    def save(self, directory: str, *, keep: int = 3,
-             block: bool = True) -> int:
-        """Atomic checkpoint of the sparse state; returns the step saved."""
+    def save(self, directory: str, *, keep: int = 3, block: bool = True,
+             loader: Optional[ShardedLoader] = None) -> int:
+        """Atomic checkpoint of the sparse state; returns the step saved.
+
+        The data cursor of `loader` (default: the last loader handed to
+        fit/fit_sgd) is persisted in the manifest extras, so restore resumes
+        the exact batch stream."""
+        loader = loader if loader is not None else self._loader
         step = int(self.state.step)
+        extra = {"kind": "dpmr_sparse",
+                 "distribution": self.cfg.distribution,
+                 "optimizer": self.cfg.optimizer,
+                 "num_features": self.cfg.num_features}
+        if loader is not None:
+            extra["data"] = loader.state_dict()
         Checkpointer(directory, keep=keep).save(
-            step, self.state, block=block,
-            extra={"kind": "dpmr_sparse",
-                   "distribution": self.cfg.distribution,
-                   "optimizer": self.cfg.optimizer,
-                   "num_features": self.cfg.num_features})
+            step, self.state, block=block, extra=extra)
         return step
 
-    def restore(self, directory: str, step: Optional[int] = None) -> Dict:
+    def restore(self, directory: str, step: Optional[int] = None, *,
+                loader: Optional[ShardedLoader] = None) -> Dict:
         """Restore state in place (latest step by default); returns the
         checkpoint manifest. Leaves are placed under the engine's current
         shardings, so restoring onto a different mesh re-shards (for a mesh
-        with a different shard count, re-pad via runtime/elastic.py)."""
+        with a different shard count, re-pad via runtime/elastic.py).
+
+        If the checkpoint carries a data cursor and a loader is available
+        (`loader=` or the engine's attached one), the loader is sought to
+        it — training continues on the exact next batch."""
         with compat.set_mesh(self.mesh):
             self.state, manifest = Checkpointer(directory).restore(
                 self.state, step=step)
+        if loader is not None:
+            self._loader = loader      # attach even for cursor-less ckpts,
+        else:                          # so the NEXT save records a cursor
+            loader = self._loader
+        data_state = manifest.get("extra", {}).get("data")
+        if data_state is not None:
+            if loader is not None:
+                loader.load_state_dict(data_state)
+            else:
+                warnings.warn(
+                    "checkpoint carries a data cursor "
+                    f"{data_state.get('cursor')} but no loader is attached; "
+                    "pass loader= (or seek your loader to this cursor) or "
+                    "training will replay already-consumed batches",
+                    RuntimeWarning, stacklevel=2)
         return manifest

@@ -1,10 +1,13 @@
 """Legacy public API of the DPMR core.
 
-Prefer `repro.api` (the typed `DPMREngine` façade + strategy registry);
-this module keeps the flat re-exports working for one release. The training
-entry points re-exported from `core.sparse_lr` emit DeprecationWarnings —
-see that module's docstring for the old→new migration table.
+Prefer `repro.api` (the typed `DPMREngine` façade + strategy registry) and
+`repro.data` (the DataSource registry + ShardedLoader); this module keeps
+flat re-exports of the core primitives working. The deprecated fn-dict
+training entry points (`dpmr_train`, `dpmr_train_sgd`, `dpmr_classify`,
+`evaluate` from the old `core.sparse_lr`) completed their one-release
+deprecation and were REMOVED — see the migration table in CHANGES.md.
 """
+from repro.api.engine import hot_ids_from_corpus
 from repro.core.dpmr import (
     DPMRState,
     StepFns,
@@ -31,20 +34,12 @@ from repro.core.sparse import (
     route_build,
     route_return,
 )
-from repro.core.sparse_lr import (
-    dpmr_classify,
-    dpmr_train,
-    dpmr_train_sgd,
-    evaluate,
-    hot_ids_from_corpus,
-)
 
 __all__ = [
     "DPMRState", "Routing", "StepFns", "capacity", "combine_grads",
-    "dpmr_classify", "dpmr_dense_linear", "dpmr_train", "dpmr_train_sgd",
-    "evaluate", "feature_counts", "fsdp_specs", "hot_ids_from_corpus",
-    "init_state", "load_imbalance", "make_schedule", "make_step_fns",
-    "num_shards", "optimize", "owner_accumulate", "owner_apply",
-    "padded_features", "route_build", "route_return", "select_hot",
-    "split_hot",
+    "dpmr_dense_linear", "feature_counts", "fsdp_specs",
+    "hot_ids_from_corpus", "init_state", "load_imbalance", "make_schedule",
+    "make_step_fns", "num_shards", "optimize", "owner_accumulate",
+    "owner_apply", "padded_features", "route_build", "route_return",
+    "select_hot", "split_hot",
 ]

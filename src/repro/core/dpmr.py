@@ -29,7 +29,6 @@ sparse face selects them exactly like the dense trainer does.
 from __future__ import annotations
 
 import functools
-import warnings
 from typing import Callable, NamedTuple, Tuple
 
 import jax
@@ -169,9 +168,8 @@ def _metrics(axes, probs, labels, nll, overflow):
 class StepFns(NamedTuple):
     """Typed bundle of compiled DPMR step functions + step geometry.
 
-    Replaces the raw fn-dict `make_step_fns` used to return. Dict-style
-    access (`fns["train_step"]`) still works for one release via
-    `__getitem__`, with a DeprecationWarning.
+    Access is attribute-only (`fns.train_step`); the one-release
+    deprecated dict-style `fns["train_step"]` has been removed.
     """
 
     train_step: Callable     # (state, batch) -> (state, metrics)
@@ -182,14 +180,6 @@ class StepFns(NamedTuple):
     block_size: int          # feature-table rows per device
     num_shards: int          # P
     strategy: str = "a2a"    # registered distribution-strategy name
-
-    def __getitem__(self, key):
-        if isinstance(key, str):
-            warnings.warn(
-                "fns[...] dict access is deprecated; use StepFns "
-                f"attributes (fns.{key})", DeprecationWarning, stacklevel=2)
-            return getattr(self, key)
-        return tuple.__getitem__(self, key)
 
 
 def make_step_fns(cfg: DPMRConfig, mesh, batch_size: int,

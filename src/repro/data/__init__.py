@@ -1,0 +1,31 @@
+"""Unified data plane: `DataSource` registry + prefetching `ShardedLoader`.
+
+    from repro.data import (Cursor, DataSource, ShardedLoader, get_source,
+                            list_sources, register_source, write_file_corpus)
+
+Sources are deterministic, seekable batch stores selected by name
+(`zipf_sparse`, `lm_markov`, `file_sparse`, user-registered); the loader
+fronts one with host sharding, mesh-divisibility conformance, background
+prefetch, and an explicit resumable `Cursor`. `DPMREngine.fit/fit_sgd/
+evaluate` accept a loader (or a source name + spec) directly.
+
+The legacy generators (`sparse_corpus.batches`, `pipeline.LMDataset.iterate`)
+are thin deprecation shims over the same batch functions.
+"""
+from repro.data.loader import Cursor, ShardedLoader
+from repro.data.sources import (
+    DataSource,
+    FileSparseSource,
+    LMMarkovSource,
+    ZipfSparseSource,
+    get_source,
+    list_sources,
+    register_source,
+    write_file_corpus,
+)
+
+__all__ = [
+    "Cursor", "DataSource", "FileSparseSource", "LMMarkovSource",
+    "ShardedLoader", "ZipfSparseSource", "get_source", "list_sources",
+    "register_source", "write_file_corpus",
+]

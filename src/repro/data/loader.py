@@ -1,0 +1,374 @@
+"""`ShardedLoader` — the prefetching, resumable front of the data plane.
+
+One loader owns everything between a `DataSource` and the training step:
+
+  host sharding     with H hosts, host h reads global batches h, h+H, ...
+                    (each host streams its own sample shard, the paper's
+                    per-node HDFS blocks); `steps_per_epoch` is the
+                    even-length floor `num_batches // H`. NB: per-batch
+                    interleaving means a chunked `file_sparse` corpus is
+                    read by every host (Hx read amplification) — chunk-
+                    aligned per-host ranges are a ROADMAP open item
+                    ("multi-process file-shard ownership").
+  conformance       global batch size must divide by the mesh's shard count
+                    P (shard_map constraint); the loader drops the remainder
+                    rows (default) or zero-pads (`remainder="pad"`; sparse
+                    `ids` pad with -1 == empty slots).
+  placement         "sharded" device_puts every leaf sharded over all mesh
+                    axes (what the DPMR sparse step expects), "device" is a
+                    plain `jnp.asarray` (dense trainer), "host" yields
+                    numpy, or pass any callable(batch) -> batch.
+  prefetch          a daemon thread synthesizes + places the next batches
+                    while the consumer runs the training step; a bounded
+                    queue of DEVICE-resident batches (default depth 2) gives
+                    double-buffering, so host batch synthesis and H2D copy
+                    overlap compute instead of serializing with it.
+  cursor            an explicit (epoch, step) position. Batch content is a
+                    pure function of `step` (epochs re-read the same shard,
+                    the paper's full-batch regime), so `seek(cursor)` after
+                    a restore reproduces the continued stream bit-for-bit.
+                    The cursor only advances when a batch is HANDED to the
+                    consumer — the prefetch thread running ahead never
+                    moves it, so a checkpoint taken mid-stream is exact.
+
+    loader = ShardedLoader(get_source("zipf_sparse", batch_size=512,
+                                      num_batches=8), mesh)
+    for batch in loader.batches(40): ...   # 40 steps, epochs roll over
+    for batch in loader.epoch(): ...       # remainder of the current epoch
+    ck = loader.state_dict()               # {"cursor": {"epoch": e, "step": s}}
+    loader.load_state_dict(ck)             # exact resume
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import warnings
+from typing import Callable, Dict, Iterator, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.data.sources import DataSource
+
+
+def put_sharded(batch: Dict, mesh) -> Dict:
+    """Host→device placement: every batch leaf sharded over all mesh axes.
+
+    THE definition of sparse-face placement — `repro.api.engine.put_batch`
+    delegates here. Leaves already under the target sharding (a loader
+    prefetched and placed them) pass through untouched."""
+    sharding = NamedSharding(mesh, P(tuple(mesh.axis_names)))
+    out = {}
+    for k, v in batch.items():
+        if isinstance(v, jax.Array) and v.sharding == sharding:
+            out[k] = v
+        else:
+            out[k] = jax.device_put(jnp.asarray(v), sharding)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Cursor:
+    """Explicit stream position: `epoch` full passes done, `step` batches
+    consumed within the current pass (local to this host's shard)."""
+
+    epoch: int = 0
+    step: int = 0
+
+    def to_dict(self) -> Dict[str, int]:
+        return {"epoch": int(self.epoch), "step": int(self.step)}
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "Cursor":
+        return cls(epoch=int(d["epoch"]), step=int(d["step"]))
+
+
+class ShardedLoader:
+    """Per-host sharded, conforming, prefetching view of a `DataSource`.
+
+    Parameters
+    ----------
+    source:        any DataSource (see repro.data.sources)
+    mesh:          jax Mesh; sets the default batch divisor (shard count P)
+                   and the "sharded" placement target. Optional for
+                   host-only use.
+    placement:     "sharded" | "device" | "host" | callable(batch) -> batch
+    host_index / num_hosts:
+                   this process's slice of the batch stream; default
+                   jax.process_index()/process_count()
+    batch_divisor: override the divisibility constraint (default: product
+                   of mesh axis sizes under "sharded", else 1)
+    remainder:     "drop" (default) or "pad" when batch_size % divisor != 0.
+                   Pad rows are EMPTY samples (ids=-1, vals=0, labels=0):
+                   they contribute no feature gradients, but they do count
+                   in loss/accuracy denominators and in PRF metrics — keep
+                   "drop" for anything metrics-sensitive
+    prefetch:      queue depth of placed batches built ahead by a background
+                   thread; 0 = fully synchronous
+    epoch_size:    batches per epoch for UNBOUNDED sources (required by
+                   `epoch()`; bounded sources define it themselves)
+    cursor:        starting position (default (0, 0))
+    """
+
+    def __init__(self, source: DataSource, mesh=None, *,
+                 placement: Union[str, Callable] = "sharded",
+                 host_index: Optional[int] = None,
+                 num_hosts: Optional[int] = None,
+                 batch_divisor: Optional[int] = None,
+                 remainder: str = "drop",
+                 prefetch: int = 2,
+                 epoch_size: Optional[int] = None,
+                 cursor: Optional[Cursor] = None):
+        self.source = source
+        # duck-typed sources only promise batch/batch_size/num_batches
+        self.source_name = getattr(source, "name", type(source).__name__)
+        self.mesh = mesh
+        self.placement = placement
+        self.num_hosts = int(num_hosts if num_hosts is not None
+                             else jax.process_count())
+        self.host_index = int(host_index if host_index is not None
+                              else jax.process_index())
+        if not 0 <= self.host_index < self.num_hosts:
+            raise ValueError((self.host_index, self.num_hosts))
+        if remainder not in ("drop", "pad"):
+            raise ValueError(f"remainder must be 'drop'|'pad': {remainder!r}")
+        self.remainder = remainder
+        self.prefetch = int(prefetch)
+        self._sharding = None
+        if placement == "sharded":
+            if mesh is None:
+                raise ValueError("placement='sharded' needs a mesh")
+            self._sharding = NamedSharding(mesh, P(tuple(mesh.axis_names)))
+        if batch_divisor is None:
+            batch_divisor = 1
+            if self._sharding is not None:
+                for a in mesh.axis_names:
+                    batch_divisor *= int(mesh.shape[a])
+        self.batch_divisor = int(batch_divisor)
+        n = epoch_size if epoch_size is not None else source.num_batches
+        self.steps_per_epoch = None if n is None else int(n) // self.num_hosts
+        if self.steps_per_epoch is not None and self.steps_per_epoch < 1:
+            raise ValueError(
+                f"source has {n} batches for {self.num_hosts} hosts: "
+                "fewer than one batch per host per epoch")
+        self._cursor = cursor if cursor is not None else Cursor()
+        self._seek_token = 0   # bumped by seek(); invalidates live iterators
+
+    # -- cursor -------------------------------------------------------------
+
+    @property
+    def cursor(self) -> Cursor:
+        return self._cursor
+
+    def seek(self, cursor: Union[Cursor, Dict]) -> None:
+        """Reposition the stream; the next batch is the one an uninterrupted
+        run would have produced at this cursor.
+
+        Any iterator already obtained from batches()/epoch() planned its
+        positions from the OLD cursor — resuming one after a seek raises
+        RuntimeError rather than silently serving stale positions."""
+        if isinstance(cursor, dict):
+            cursor = Cursor.from_dict(cursor)
+        self._seek_token += 1
+        self._cursor = cursor
+
+    def state_dict(self) -> Dict:
+        return {"cursor": self._cursor.to_dict(),
+                "source": self.source_name,
+                "batch_size": int(getattr(self.source, "batch_size", 0)),
+                "num_hosts": self.num_hosts}
+
+    def load_state_dict(self, state: Dict) -> None:
+        """Restore a `state_dict()` position, validating that the stream it
+        was recorded against is the one this loader reads."""
+        saved_hosts = state.get("num_hosts")
+        if saved_hosts is not None and int(saved_hosts) != self.num_hosts:
+            raise ValueError(
+                f"cursor was recorded with num_hosts={saved_hosts} but this "
+                f"loader shards over {self.num_hosts} hosts — the host-local "
+                "step would address a different sample stream; recompute the "
+                "position for the new host count before seeking")
+        saved_source = state.get("source")
+        if saved_source is not None and saved_source != self.source_name:
+            warnings.warn(
+                f"restoring a cursor recorded against source "
+                f"{saved_source!r} into a {self.source_name!r} loader; "
+                "resume is only exact if both serve identical batches",
+                RuntimeWarning, stacklevel=2)
+        saved_bs = state.get("batch_size")
+        here_bs = int(getattr(self.source, "batch_size", 0))
+        if saved_bs and here_bs and int(saved_bs) != here_bs:
+            warnings.warn(
+                f"cursor was recorded against batch_size={saved_bs} but "
+                f"this loader's source serves batch_size={here_bs}; the "
+                "step index addresses different samples — resume is not "
+                "exact", RuntimeWarning, stacklevel=2)
+        self.seek(Cursor.from_dict(state["cursor"]))
+
+    # -- iteration ----------------------------------------------------------
+
+    def batches(self, limit: Optional[int] = None) -> Iterator[Dict]:
+        """Yield up to `limit` placed batches from the cursor onward,
+        rolling over epochs on bounded sources (None = unbounded stream).
+
+        One live iterator at a time: starting a new one (like seek) stales
+        any earlier iterator's plan — resuming the old one raises
+        RuntimeError instead of serving duplicate positions."""
+        self._seek_token += 1
+        token = self._seek_token
+        plan = self._positions(self._cursor, limit)
+        if self.prefetch <= 0:
+            for pos, after in plan:
+                self._check_token(token)
+                batch = self._place(self._load(pos))
+                self._cursor = after
+                yield batch
+            return
+        yield from self._prefetched(plan, token)
+
+    def epoch(self, from_start: bool = False) -> Iterator[Dict]:
+        """The remainder of the current epoch (or, with `from_start`, the
+        whole current epoch); afterwards the cursor sits at the next epoch's
+        start. One call == one full pass of this host's shard — the paper's
+        per-iteration corpus sweep."""
+        spe = self.steps_per_epoch
+        if spe is None:
+            raise ValueError(
+                f"source {self.source_name!r} is unbounded, so an epoch is "
+                "undefined: give the source a bounded num_batches (e.g. "
+                "num_batches= in the spec passed to get_source) or pass "
+                "epoch_size= when constructing the ShardedLoader")
+
+        def gen():
+            # everything binds at ITERATION time, not at epoch() call time:
+            # if the cursor moved in between (another take(), a seek), the
+            # pass still ends exactly at the next epoch boundary instead of
+            # spilling a stale batch count into the following epoch
+            if self._cursor.step >= spe:
+                # normalize an epoch-boundary/overshot cursor the same way
+                # _positions() would, so the limit never goes negative
+                self._cursor = Cursor(self._cursor.epoch + 1, 0)
+            if from_start and self._cursor.step != 0:
+                self._cursor = Cursor(self._cursor.epoch, 0)
+            yield from self.batches(spe - self._cursor.step)
+
+        return gen()
+
+    def take(self, n: int) -> list:
+        return list(self.batches(n))
+
+    # -- internals ----------------------------------------------------------
+
+    def _check_token(self, token: int) -> None:
+        if token != self._seek_token:
+            raise RuntimeError(
+                "loader was repositioned (seek/load_state_dict) or a newer "
+                "iterator was started while this iterator was active; its "
+                "remaining plan is stale — create a new iterator with "
+                "batches()/epoch()")
+
+    def _positions(self, start: Cursor, limit: Optional[int]
+                   ) -> Iterator[tuple]:
+        """(position, cursor-after) pairs from `start`, epoch-rolling."""
+        spe = self.steps_per_epoch
+        cur = start
+        produced = 0
+        while limit is None or produced < limit:
+            if spe is not None and cur.step >= spe:
+                cur = Cursor(cur.epoch + 1, 0)
+            nxt = Cursor(cur.epoch, cur.step + 1)
+            if spe is not None and nxt.step >= spe:
+                nxt = Cursor(cur.epoch + 1, 0)
+            yield cur, nxt
+            cur = nxt
+            produced += 1
+
+    def _load(self, pos: Cursor) -> Dict[str, np.ndarray]:
+        # content depends only on `step`: every epoch re-reads the same
+        # shard in the same order (deterministic full-batch regime)
+        index = pos.step * self.num_hosts + self.host_index
+        return self._conform(self.source.batch(index))
+
+    def _conform(self, batch: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        d = self.batch_divisor
+        b = next(iter(batch.values())).shape[0]
+        rem = b % d
+        if rem == 0:
+            return batch
+        if self.remainder == "drop":
+            keep = b - rem
+            if keep == 0:
+                raise ValueError(
+                    f"batch of {b} samples smaller than the mesh divisibility "
+                    f"constraint {d}; use remainder='pad' or a larger batch")
+            return {k: v[:keep] for k, v in batch.items()}
+        pad = d - rem
+        out = {}
+        for k, v in batch.items():
+            fill_val = -1 if k == "ids" else 0
+            fill = np.full((pad,) + v.shape[1:], fill_val, v.dtype)
+            out[k] = np.concatenate([np.asarray(v), fill], axis=0)
+        return out
+
+    def _place(self, batch: Dict[str, np.ndarray]) -> Dict:
+        if callable(self.placement):
+            return self.placement(batch)
+        if self.placement == "sharded":
+            return put_sharded(batch, self.mesh)
+        if self.placement == "device":
+            return {k: jnp.asarray(v) for k, v in batch.items()}
+        if self.placement == "host":
+            return batch
+        raise ValueError(f"unknown placement {self.placement!r}")
+
+    def _prefetched(self, plan: Iterator[tuple],
+                    token: int) -> Iterator[Dict]:
+        """Background-thread synthesis + placement, bounded-queue delivery.
+
+        The cursor advances on the CONSUMER side as batches are handed out;
+        the producer running ahead never moves it, so checkpoints taken
+        between steps are exact resume points.
+        """
+        q: "queue.Queue" = queue.Queue(maxsize=self.prefetch)
+        stop = threading.Event()
+
+        def offer(item) -> bool:
+            while not stop.is_set():
+                try:
+                    q.put(item, timeout=0.05)
+                    return True
+                except queue.Full:
+                    continue
+            return False
+
+        def producer():
+            try:
+                for pos, after in plan:
+                    if stop.is_set():
+                        return
+                    if not offer(("batch", self._place(self._load(pos)),
+                                  after)):
+                        return
+                offer(("done", None, None))
+            except BaseException as e:  # surface in the consumer
+                offer(("error", e, None))
+
+        thread = threading.Thread(target=producer, daemon=True,
+                                  name="sharded-loader-prefetch")
+        thread.start()
+        try:
+            while True:
+                kind, payload, after = q.get()
+                if kind == "done":
+                    return
+                if kind == "error":
+                    raise payload
+                self._check_token(token)
+                self._cursor = after
+                yield payload
+        finally:
+            stop.set()
+            thread.join(timeout=5.0)

@@ -9,6 +9,7 @@ enough structure for loss to move in the integration tests.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, Iterator
 
 import numpy as np
@@ -49,6 +50,16 @@ class LMDataset:
                 "labels": toks[:, 1:].astype(np.int32)}
 
     def iterate(self, start_step: int = 0) -> Iterator[Dict]:
+        """DEPRECATED: use the data plane instead —
+
+            get_source("lm_markov", vocab_size=V, seq_len=S, batch_size=B)
+
+        fronted by a `repro.data.ShardedLoader` (prefetch + resumable
+        cursor). This shim yields bit-identical batches."""
+        warnings.warn(
+            "LMDataset.iterate is deprecated; use repro.data.get_source"
+            "('lm_markov', ...) with a ShardedLoader", DeprecationWarning,
+            stacklevel=2)
         step = start_step
         while True:
             yield self.batch(step)

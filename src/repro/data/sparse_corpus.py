@@ -9,6 +9,7 @@ b tuned to the target positive rate.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Iterator, Tuple
 
 import numpy as np
@@ -53,6 +54,13 @@ def true_weights(spec: CorpusSpec) -> Tuple[np.ndarray, np.ndarray]:
     return ids, w
 
 
+def batch_seed(spec: CorpusSpec, index: int) -> int:
+    """THE per-index seeding rule of the Zipf corpus. Single definition —
+    `ZipfSparseSource.batch(i)` and the legacy `batches` generator both use
+    it, and checkpoint resume-exactness depends on it never diverging."""
+    return spec.seed * 100003 + index
+
+
 def make_batch(spec: CorpusSpec, batch_size: int, seed: int):
     """One padded-CSR batch: dict(ids (B,K), vals (B,K), labels (B,))."""
     rng = np.random.default_rng(seed)
@@ -82,6 +90,16 @@ def make_batch(spec: CorpusSpec, batch_size: int, seed: int):
 
 def batches(spec: CorpusSpec, batch_size: int, num_batches: int,
             start: int = 0) -> Iterator[dict]:
-    """Deterministic, seekable batch stream (resume = pass `start`)."""
+    """DEPRECATED: use the data plane instead —
+
+        get_source("zipf_sparse", spec=spec, batch_size=B, num_batches=n,
+                   start=k)
+
+    fronted by a `repro.data.ShardedLoader` (prefetch + resumable cursor).
+    This shim yields bit-identical batches (same per-index seeding)."""
+    warnings.warn(
+        "sparse_corpus.batches is deprecated; use repro.data.get_source"
+        "('zipf_sparse', ...) with a ShardedLoader", DeprecationWarning,
+        stacklevel=2)
     for i in range(start, num_batches):
-        yield make_batch(spec, batch_size, seed=spec.seed * 100003 + i)
+        yield make_batch(spec, batch_size, seed=batch_seed(spec, i))

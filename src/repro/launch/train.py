@@ -1,8 +1,9 @@
 """End-to-end training driver (host-scale; full configs go through dryrun).
 
-Wires together: model zoo, DPMR-dense sharded trainer, deterministic data
-pipeline, checkpoint manager (atomic/keep-N/async), preemption guard,
-straggler watchdog, and resume (model + optimizer + data position).
+Wires together: model zoo, DPMR-dense sharded trainer, the `repro.data`
+plane (lm_markov source + prefetching ShardedLoader with a resumable
+cursor), checkpoint manager (atomic/keep-N/async), preemption guard,
+straggler watchdog, and resume (model + optimizer + exact data position).
 
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch granite-8b --smoke \
@@ -13,15 +14,13 @@ from __future__ import annotations
 
 import argparse
 import logging
-import time
 
 import jax
-import jax.numpy as jnp
 
 from repro import compat
 from repro.ckpt.checkpointer import Checkpointer
 from repro.configs.base import ParallelConfig, TrainConfig
-from repro.data.pipeline import LMDataConfig, LMDataset, encdec_batch
+from repro.data import Cursor, ShardedLoader, get_source
 from repro.launch.mesh import make_host_mesh
 from repro.models import registry
 from repro.runtime.fault_tolerance import (FailureInjector, PreemptionGuard,
@@ -29,6 +28,22 @@ from repro.runtime.fault_tolerance import (FailureInjector, PreemptionGuard,
 from repro.train import trainer
 
 log = logging.getLogger("repro.train")
+
+
+def make_loader(args, cfg, mesh=None) -> ShardedLoader:
+    """The driver's data plane: lm_markov source (with encoder frames for
+    encdec families) behind a prefetching loader. Batches stay host-shaped
+    ("device" placement) — the jitted trainer step owns distribution.
+    Pinned to a single stream (host 0 of 1): every process must feed the
+    jitted step identical global batches, exactly as the pre-loader driver
+    did; per-host disjoint shards need global-array placement first."""
+    source = get_source(
+        "lm_markov", vocab_size=cfg.vocab_size, seq_len=args.seq,
+        batch_size=args.batch, seed=args.data_seed,
+        encdec_d_model=cfg.d_model if cfg.family == "encdec" else 0)
+    return ShardedLoader(source, mesh, placement="device",
+                         host_index=0, num_hosts=1,
+                         prefetch=args.prefetch)
 
 
 def train_loop(args, fail_injector=None) -> dict:
@@ -39,8 +54,7 @@ def train_loop(args, fail_injector=None) -> dict:
     tc = TrainConfig(learning_rate=args.lr, warmup_steps=args.warmup,
                      total_steps=args.steps, optimizer=args.optimizer)
     pc = ParallelConfig(microbatches=args.microbatches)
-    ds = LMDataset(LMDataConfig(cfg.vocab_size, args.seq, args.batch,
-                                seed=args.data_seed))
+    loader = make_loader(args, cfg, mesh)
     ck = Checkpointer(args.ckpt, keep=args.keep) if args.ckpt else None
     guard = PreemptionGuard() if args.preemption_guard else None
     watchdog = StragglerWatchdog()
@@ -51,19 +65,25 @@ def train_loop(args, fail_injector=None) -> dict:
         start_step = 0
         if ck is not None and ck.latest_step() is not None:
             state, manifest = ck.restore(state)
-            start_step = manifest["extra"]["data_step"]
+            extra = manifest["extra"]
+            if "data" in extra:                      # cursor-carrying ckpt
+                loader.load_state_dict(extra["data"])
+                start_step = loader.cursor.step
+            else:                                    # pre-data-plane ckpt
+                start_step = extra["data_step"]
+                loader.seek(Cursor(0, start_step))
             log.info("resumed from step %d", start_step)
         step_fn = jax.jit(trainer.make_train_step(spec, cfg, tc, pc, mesh))
 
+        def save(step, block):
+            ck.save(step, state,
+                    extra={"data_step": step, "data": loader.state_dict()},
+                    block=block)
+
         losses = []
         i = start_step
-        while i < args.steps:
+        for batch in loader.batches(args.steps - start_step):
             watchdog.step_start()
-            if cfg.family == "encdec":
-                batch = encdec_batch(ds, i, cfg.d_model)
-            else:
-                batch = ds.batch(i)
-            batch = jax.tree.map(jnp.asarray, batch)
             if fail_injector is not None:
                 fail_injector.maybe_fail(i)
             state, metrics = step_fn(state, batch)
@@ -76,11 +96,10 @@ def train_loop(args, fail_injector=None) -> dict:
                          float(metrics["lr"]))
             if ck is not None and (i % args.save_every == 0
                                    or i == args.steps):
-                ck.save(i, state, extra={"data_step": i},
-                        block=not args.async_ckpt)
+                save(i, block=not args.async_ckpt)
             if guard is not None and guard.preempted():
                 if ck is not None:
-                    ck.save(i, state, extra={"data_step": i}, block=True)
+                    save(i, block=True)
                 log.warning("preempted; saved at step %d", i)
                 break
         if ck is not None:
@@ -108,6 +127,8 @@ def build_parser():
     ap.add_argument("--save-every", type=int, default=20)
     ap.add_argument("--async-ckpt", action="store_true")
     ap.add_argument("--data-seed", type=int, default=0)
+    ap.add_argument("--prefetch", type=int, default=2,
+                    help="loader prefetch depth (0 = synchronous input)")
     ap.add_argument("--log-every", type=int, default=10)
     # BooleanOptionalAction so --no-preemption-guard is expressible
     # (store_true with default=True could never be disabled)

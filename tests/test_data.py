@@ -1,0 +1,531 @@
+"""Data-plane tests: source registry, built-in source equivalence, file
+corpus roundtrip, ShardedLoader (conformance, host sharding, prefetch,
+cursors), and resume-exactness through engine save/restore."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.api import DPMREngine
+from repro.configs.base import DPMRConfig
+from repro.data import (Cursor, DataSource, ShardedLoader, get_source,
+                        list_sources, register_source, sparse_corpus,
+                        write_file_corpus)
+from repro.data.pipeline import LMDataConfig, LMDataset
+from repro.launch.mesh import make_host_mesh
+
+F = 1 << 12
+CORPUS = dict(num_features=F, features_per_sample=16, signal_features=256,
+              seed=0)
+
+
+def _zipf(batch_size=64, num_batches=None, start=0):
+    return get_source("zipf_sparse", batch_size=batch_size,
+                      num_batches=num_batches, start=start, **CORPUS)
+
+
+def _cfg(**kw):
+    base = dict(num_features=F, max_features_per_sample=16, iterations=2,
+                learning_rate=1.0, max_hot=32, optimizer="adagrad")
+    base.update(kw)
+    return DPMRConfig(**base)
+
+
+def _assert_batches_equal(a, b):
+    assert set(a) == set(b)
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_source_registry():
+    assert {"zipf_sparse", "lm_markov", "file_sparse"} <= set(list_sources())
+    with pytest.raises(KeyError):
+        get_source("nope")
+
+    @register_source("test_custom_source")
+    class Custom(DataSource):
+        name = "test_custom_source"
+        batch_size = 4
+        num_batches = 2
+
+        def batch(self, index):
+            self._check_index(index)
+            return {"x": np.full((4,), index)}
+
+    src = get_source("test_custom_source")
+    assert src.batch(1)["x"][0] == 1
+    with pytest.raises(IndexError):
+        src.batch(2)
+    assert len(list(src.iter_batches())) == 2
+
+
+# ---------------------------------------------------------------------------
+# built-in sources == the legacy generators, bit for bit
+# ---------------------------------------------------------------------------
+
+
+def test_zipf_source_matches_legacy_batches():
+    src = _zipf(num_batches=5)
+    spec = src.spec
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = list(sparse_corpus.batches(spec, 64, 5))
+    for i, want in enumerate(legacy):
+        _assert_batches_equal(src.batch(i), want)
+    # start= carves the same held-out window the old start arg did
+    tail = get_source("zipf_sparse", spec=spec, batch_size=64,
+                      num_batches=2, start=3)
+    _assert_batches_equal(tail.batch(0), legacy[3])
+    _assert_batches_equal(tail.batch(1), legacy[4])
+
+
+def test_lm_source_matches_legacy_dataset():
+    src = get_source("lm_markov", vocab_size=101, seq_len=8, batch_size=4,
+                     seed=3)
+    ds = LMDataset(LMDataConfig(101, 8, 4, seed=3))
+    for i in (0, 7):
+        _assert_batches_equal(src.batch(i), ds.batch(i))
+    enc = get_source("lm_markov", vocab_size=101, seq_len=8, batch_size=4,
+                     encdec_d_model=16)
+    assert enc.batch(0)["frames"].shape == (4, 8, 16)
+
+
+def test_legacy_generators_warn():
+    with pytest.warns(DeprecationWarning):
+        next(sparse_corpus.batches(_zipf().spec, 8, 1))
+    with pytest.warns(DeprecationWarning):
+        next(LMDataset(LMDataConfig(11, 4, 2)).iterate())
+
+
+# ---------------------------------------------------------------------------
+# file_sparse: the on-disk sample shards
+# ---------------------------------------------------------------------------
+
+
+def test_file_corpus_roundtrip(tmp_path):
+    src = _zipf(num_batches=6)
+    manifest = write_file_corpus(str(tmp_path), src, batches_per_chunk=4)
+    assert manifest["num_chunks"] == 2
+    fs = get_source("file_sparse", directory=str(tmp_path))
+    assert fs.num_batches == 6 and fs.batch_size == 64
+    for i in (0, 3, 5, 1):                        # includes a backward seek
+        _assert_batches_equal(fs.batch(i), src.batch(i))
+    with pytest.raises(IndexError):
+        fs.batch(6)
+    # batches are copies: consumer mutation must not corrupt the cache
+    fs.batch(0)["vals"][:] = -99.0
+    _assert_batches_equal(fs.batch(0), src.batch(0))
+
+
+def test_file_source_shared_across_prefetch_threads(tmp_path):
+    """One FileSparseSource object served to two prefetching loaders at
+    once: the chunk cache is locked, so neither stream sees torn or
+    wrong-chunk batches."""
+    src = _zipf(num_batches=8)
+    write_file_corpus(str(tmp_path), src, batches_per_chunk=2)
+    shared = get_source("file_sparse", directory=str(tmp_path))
+    la = ShardedLoader(shared, placement="host", prefetch=2)
+    lb = ShardedLoader(shared, placement="host", prefetch=2,
+                       cursor=Cursor(0, 5))
+    ita, itb = la.batches(8), lb.batches(3)
+    got_a, got_b = [], []
+    for i in range(8):                  # interleave: both threads live
+        got_a.append(next(ita))
+        if i < 3:
+            got_b.append(next(itb))
+    for i in range(8):
+        _assert_batches_equal(got_a[i], src.batch(i))
+    for j in range(3):
+        _assert_batches_equal(got_b[j], src.batch(5 + j))
+
+
+def test_write_file_corpus_unbounded_needs_count(tmp_path):
+    with pytest.raises(ValueError):
+        write_file_corpus(str(tmp_path), _zipf(num_batches=None))
+    write_file_corpus(str(tmp_path), _zipf(num_batches=None), num_batches=3)
+    assert get_source("file_sparse", directory=str(tmp_path)).num_batches == 3
+
+
+# ---------------------------------------------------------------------------
+# ShardedLoader: conformance, sharding, prefetch, cursor
+# ---------------------------------------------------------------------------
+
+
+def test_loader_epoch_rollover_and_seek():
+    mesh = make_host_mesh(1, 1)
+    loader = ShardedLoader(_zipf(num_batches=3), mesh, prefetch=0)
+    got = loader.take(5)                    # epoch 0 (3 batches) + 2 more
+    assert loader.cursor == Cursor(1, 2)
+    _assert_batches_equal(got[3], got[0])   # epochs re-read the same shard
+    fresh = ShardedLoader(_zipf(num_batches=3), mesh, prefetch=0)
+    fresh.seek(Cursor(1, 1))
+    _assert_batches_equal(fresh.take(1)[0], got[4])
+
+
+def test_loader_prefetch_stream_identical():
+    mesh = make_host_mesh(1, 1)
+    sync = ShardedLoader(_zipf(num_batches=4), mesh, prefetch=0).take(7)
+    pre = ShardedLoader(_zipf(num_batches=4), mesh, prefetch=3).take(7)
+    for a, b in zip(sync, pre):
+        _assert_batches_equal(a, b)
+
+
+def test_loader_early_break_cursor_and_thread():
+    mesh = make_host_mesh(1, 1)
+    loader = ShardedLoader(_zipf(), mesh, prefetch=2)
+    for i, _ in enumerate(loader.batches()):      # unbounded stream
+        if i == 2:
+            break
+    assert loader.cursor == Cursor(0, 3)          # 3 batches consumed
+    # the stream resumes exactly where the consumer stopped
+    _assert_batches_equal(loader.take(1)[0],
+                          ShardedLoader(_zipf(), mesh,
+                                        cursor=Cursor(0, 3)).take(1)[0])
+
+
+def test_loader_host_sharding():
+    mesh = make_host_mesh(1, 1)
+    src = _zipf(num_batches=6)
+    h0 = ShardedLoader(src, mesh, host_index=0, num_hosts=2, prefetch=0)
+    h1 = ShardedLoader(_zipf(num_batches=6), mesh, host_index=1, num_hosts=2,
+                       prefetch=0)
+    assert h0.steps_per_epoch == 3                # 6 batches // 2 hosts
+    _assert_batches_equal(h0.take(1)[0], src.batch(0))
+    _assert_batches_equal(h1.take(1)[0], src.batch(1))
+    _assert_batches_equal(h1.take(1)[0], src.batch(3))
+
+
+def test_loader_conform_drop_and_pad():
+    mesh = make_host_mesh(1, 1)
+    drop = ShardedLoader(_zipf(), mesh, batch_divisor=48, prefetch=0)
+    assert next(iter(drop.batches(1)))["ids"].shape[0] == 48
+    pad = ShardedLoader(_zipf(), mesh, batch_divisor=48, remainder="pad",
+                        prefetch=0)
+    b = next(iter(pad.batches(1)))
+    assert b["ids"].shape[0] == 96
+    tail = np.asarray(b["ids"])[64:]
+    assert np.all(tail == -1)                     # empty CSR slots
+    assert np.all(np.asarray(b["labels"])[64:] == 0)
+
+
+def test_seek_invalidates_live_iterator():
+    """Repositioning while an iterator is active raises instead of silently
+    serving the stale plan and clobbering the new cursor."""
+    mesh = make_host_mesh(1, 1)
+    loader = ShardedLoader(_zipf(num_batches=8), mesh, prefetch=0)
+    it = loader.batches(4)
+    next(it)
+    loader.seek(Cursor(0, 6))
+    with pytest.raises(RuntimeError, match="repositioned"):
+        next(it)
+    _assert_batches_equal(loader.take(1)[0],
+                          _zipf(num_batches=8).batch(6))  # seek honored
+
+
+def test_second_iterator_invalidates_first():
+    """Two live iterators over one loader would double-serve prefetched
+    positions; starting the second stales the first."""
+    mesh = make_host_mesh(1, 1)
+    loader = ShardedLoader(_zipf(num_batches=8), mesh, prefetch=2)
+    it1 = loader.batches()
+    b0 = next(it1)
+    _assert_batches_equal(b0, _zipf(num_batches=8).batch(0))
+    it2 = loader.batches()
+    b1 = next(it2)                          # continues from cursor (0, 1)
+    _assert_batches_equal(b1, _zipf(num_batches=8).batch(1))
+    with pytest.raises(RuntimeError, match="repositioned|iterator"):
+        next(it1)
+    assert loader.cursor == Cursor(0, 2)    # it1 could not clobber it
+
+
+def test_loader_unbounded_epoch_raises():
+    lm = get_source("lm_markov", vocab_size=11, seq_len=4, batch_size=2)
+    loader = ShardedLoader(lm, placement="host", prefetch=0)
+    with pytest.raises(ValueError, match="unbounded"):
+        loader.epoch()
+    bounded = ShardedLoader(lm, placement="host", prefetch=0, epoch_size=4)
+    assert len(list(bounded.epoch())) == 4
+
+
+def test_loader_producer_error_propagates():
+    class Broken(DataSource):
+        name = "broken"
+        batch_size = 4
+        num_batches = None
+
+        def batch(self, index):
+            if index >= 2:
+                raise RuntimeError("disk on fire")
+            return {"x": np.zeros((4,))}
+
+    loader = ShardedLoader(Broken(), placement="host", prefetch=2)
+    with pytest.raises(RuntimeError, match="disk on fire"):
+        loader.take(5)
+
+
+# ---------------------------------------------------------------------------
+# resume-exactness: restored engine + loader == uninterrupted run
+# ---------------------------------------------------------------------------
+
+
+def _sparse_source(kind, tmp_path, num_batches=None):
+    if kind == "zipf_sparse":
+        return _zipf(batch_size=128, num_batches=num_batches)
+    d = str(tmp_path / "corpus")
+    write_file_corpus(d, _zipf(batch_size=128), num_batches=8)
+    return get_source("file_sparse", directory=d)
+
+
+@pytest.mark.parametrize("kind", ["zipf_sparse", "file_sparse"])
+def test_resume_exactness_sparse(kind, tmp_path):
+    """Train k steps, save, restore into a FRESH engine + loader: the
+    continued run sees bit-identical batches and reproduces the
+    uninterrupted run's state exactly — on the synthetic and the on-disk
+    source."""
+    mesh = make_host_mesh(1, 1)
+    cfg = _cfg()
+    ckdir = str(tmp_path / "ck")
+
+    full = DPMREngine(cfg, mesh)
+    full_hist = full.fit_sgd(
+        ShardedLoader(_sparse_source(kind, tmp_path), mesh), steps=6)
+
+    part = DPMREngine(cfg, mesh)
+    part_loader = ShardedLoader(_sparse_source(kind, tmp_path), mesh)
+    part_hist = part.fit_sgd(part_loader, steps=3)
+    part.save(ckdir)
+
+    resumed = DPMREngine(cfg, mesh)
+    resumed_loader = ShardedLoader(_sparse_source(kind, tmp_path), mesh)
+    manifest = resumed.restore(ckdir, loader=resumed_loader)
+    assert manifest["extra"]["data"]["cursor"] == {"epoch": 0, "step": 3}
+    assert resumed_loader.cursor == Cursor(0, 3)
+    resumed_hist = resumed.fit_sgd(resumed_loader, steps=3)
+
+    # history of the stitched run == uninterrupted history, including step
+    # numbering (fit_sgd continues from the restored state.step)
+    assert part_hist + resumed_hist == full_hist
+    # state bit-identical
+    for a, b in zip(full.state, resumed.state):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_resume_exactness_dense_stream():
+    """Dense-face data path: a restored lm_markov loader replays the exact
+    continuation of the batch stream (the launch/train.py resume story)."""
+    def lm_loader():
+        return ShardedLoader(
+            get_source("lm_markov", vocab_size=64, seq_len=8, batch_size=4,
+                       seed=11), placement="host", prefetch=2)
+
+    full = lm_loader().take(7)
+
+    part = lm_loader()
+    _ = part.take(4)
+    saved = part.state_dict()                # what the ckpt extra carries
+
+    resumed = lm_loader()
+    resumed.load_state_dict(saved)
+    for want, got in zip(full[4:], resumed.take(3)):
+        _assert_batches_equal(want, got)
+
+
+def test_engine_save_without_loader_has_no_data_extra(tmp_path):
+    mesh = make_host_mesh(1, 1)
+    eng = DPMREngine(_cfg(), mesh)
+    eng.fit_sgd(_zipf(batch_size=128).iter_batches(limit=2))
+    eng.save(str(tmp_path))
+    eng2 = DPMREngine(_cfg(), mesh)
+    manifest = eng2.restore(str(tmp_path))
+    assert "data" not in manifest["extra"]
+
+
+def test_restore_warns_when_cursor_has_no_loader(tmp_path):
+    """A cursor-carrying checkpoint restored into an engine with no loader
+    must not silently drop the data position."""
+    mesh = make_host_mesh(1, 1)
+    eng = DPMREngine(_cfg(), mesh)
+    eng.fit_sgd(ShardedLoader(_zipf(batch_size=128), mesh), steps=2)
+    eng.save(str(tmp_path))
+    fresh = DPMREngine(_cfg(), mesh)
+    with pytest.warns(RuntimeWarning, match="no loader is attached"):
+        fresh.restore(str(tmp_path))
+
+
+def test_restore_cursorless_ckpt_still_attaches_loader(tmp_path):
+    """restore(dir, loader=L) on a pre-data-plane (cursor-less) checkpoint
+    must attach L, so the NEXT save records the cursor (regression)."""
+    mesh = make_host_mesh(1, 1)
+    eng = DPMREngine(_cfg(), mesh)
+    eng.fit_sgd(_zipf(batch_size=128).iter_batches(limit=2))  # no loader
+    eng.save(str(tmp_path / "old"))
+
+    eng2 = DPMREngine(_cfg(), mesh)
+    loader = ShardedLoader(_zipf(batch_size=128), mesh)
+    eng2.restore(str(tmp_path / "old"), loader=loader)
+    eng2.fit_sgd(loader, steps=1)
+    eng2.save(str(tmp_path / "new"))
+    eng3 = DPMREngine(_cfg(), mesh)
+    fresh = ShardedLoader(_zipf(batch_size=128), mesh)
+    manifest = eng3.restore(str(tmp_path / "new"), loader=fresh)
+    assert manifest["extra"]["data"]["cursor"] == {"epoch": 0, "step": 1}
+    assert fresh.cursor == Cursor(0, 1)
+
+
+def test_epoch_generator_binds_at_iteration_time():
+    """Consuming batches between epoch() and its iteration must not spill
+    the pass across an epoch boundary (regression: stale batch limit)."""
+    mesh = make_host_mesh(1, 1)
+    loader = ShardedLoader(_zipf(num_batches=4), mesh, prefetch=0)
+    gen = loader.epoch()
+    loader.take(1)                          # cursor moves to (0, 1)
+    got = list(gen)
+    assert len(got) == 3                    # remainder of epoch 0 only
+    assert loader.cursor == Cursor(1, 0)    # ends exactly at the boundary
+
+
+def test_spec_with_non_name_data_raises():
+    mesh = make_host_mesh(1, 1)
+    eng = DPMREngine(_cfg(), mesh)
+    with pytest.raises(TypeError, match="source NAME"):
+        eng.fit_sgd(_zipf(batch_size=128), steps=1,
+                    spec=dict(batch_size=64))
+
+
+# ---------------------------------------------------------------------------
+# engine x data-plane surface
+# ---------------------------------------------------------------------------
+
+
+def test_engine_accepts_source_name_and_spec():
+    mesh = make_host_mesh(1, 1)
+    eng = DPMREngine(_cfg(), mesh)
+    hist = eng.fit_sgd("zipf_sparse", steps=2,
+                       spec=dict(batch_size=128, **CORPUS))
+    assert len(hist) == 2 and np.isfinite(hist[-1]["loss"])
+    assert eng._loader.cursor == Cursor(0, 2)
+
+
+def test_engine_fit_and_evaluate_with_loaders():
+    mesh = make_host_mesh(1, 1)
+    eng = DPMREngine(_cfg(), mesh)
+    train = ShardedLoader(_zipf(batch_size=128, num_batches=3), mesh)
+    test = ShardedLoader(_zipf(batch_size=128, num_batches=2, start=50),
+                         mesh)
+    hist = eng.fit(train)
+    assert len(hist) == 2                   # cfg.iterations
+    assert train.cursor == Cursor(2, 0)     # one epoch per iteration
+    m1 = eng.evaluate(test)
+    m2 = eng.evaluate(test)                 # evaluate rewinds: repeatable
+    assert m1 == m2 and 0.0 <= m1["f_avg"] <= 1.0
+    assert test.cursor == Cursor(0, 0)      # cursor untouched by evaluate
+
+
+def test_evaluate_does_not_move_training_cursor():
+    """Evaluating on the training loader mid-run (train-set metrics) must
+    not corrupt the resume position save() persists (regression)."""
+    mesh = make_host_mesh(1, 1)
+    eng = DPMREngine(_cfg(), mesh)
+    loader = ShardedLoader(_zipf(batch_size=128, num_batches=5), mesh)
+    eng.fit_sgd(loader, steps=3)
+    assert loader.cursor == Cursor(0, 3)
+    eng.evaluate(loader)                    # scores the full current epoch
+    assert loader.cursor == Cursor(0, 3)    # position preserved
+
+
+def test_engine_accepts_duck_typed_registered_source(tmp_path):
+    """register_source only requires batch/batch_size/num_batches — a
+    registered class that skips the DataSource base (and even `name`) must
+    still route through the loader path (regression: the name string was
+    iterated) and checkpoint (regression: state_dict read source.name)."""
+    @register_source("test_duck_source")
+    class Duck:                                   # no DataSource base
+        batch_size = 128
+        num_batches = 2
+
+        def batch(self, index):
+            return get_source("zipf_sparse", batch_size=128,
+                              **CORPUS).batch(index)
+
+    mesh = make_host_mesh(1, 1)
+    eng = DPMREngine(_cfg(), mesh)
+    hist = eng.fit_sgd("test_duck_source", steps=2)
+    assert len(hist) == 2 and np.isfinite(hist[-1]["loss"])
+    hist = eng.fit_sgd(Duck(), steps=1)           # instance form too
+    assert len(hist) == 1
+    eng.save(str(tmp_path))                       # cursor extra: class name
+    assert eng._loader.state_dict()["source"] == "Duck"
+
+
+def test_fit_sgd_bounded_loader_default_steps_is_one_epoch():
+    """steps=None on a bounded loader == one corpus pass, not an infinite
+    epoch-rollover loop (regression); unbounded without steps is an error."""
+    mesh = make_host_mesh(1, 1)
+    eng = DPMREngine(_cfg(), mesh)
+    loader = ShardedLoader(_zipf(batch_size=128, num_batches=3), mesh)
+    assert len(eng.fit_sgd(loader)) == 3
+    assert loader.cursor == Cursor(1, 0)
+    with pytest.raises(ValueError, match="unbounded"):
+        eng.fit_sgd(ShardedLoader(_zipf(batch_size=128), mesh))
+
+
+def test_load_state_dict_rejects_host_count_mismatch():
+    mesh = make_host_mesh(1, 1)
+    saved = ShardedLoader(_zipf(num_batches=8), mesh, host_index=1,
+                          num_hosts=2).state_dict()
+    single = ShardedLoader(_zipf(num_batches=8), mesh)
+    with pytest.raises(ValueError, match="num_hosts"):
+        single.load_state_dict(saved)
+    with pytest.warns(RuntimeWarning, match="source"):
+        single.load_state_dict({"cursor": {"epoch": 0, "step": 1},
+                                "source": "file_sparse", "num_hosts": 1})
+    assert single.cursor == Cursor(0, 1)
+    with pytest.warns(RuntimeWarning, match="batch_size"):
+        single.load_state_dict({"cursor": {"epoch": 0, "step": 2},
+                                "source": "zipf_sparse", "batch_size": 32,
+                                "num_hosts": 1})
+    assert single.cursor == Cursor(0, 2)
+
+
+def test_epoch_normalizes_overshot_cursor():
+    """A cursor at/past the epoch boundary rolls into the next epoch instead
+    of producing a negative limit that silently yields nothing."""
+    mesh = make_host_mesh(1, 1)
+    loader = ShardedLoader(_zipf(num_batches=4), mesh, prefetch=0)
+    loader.seek(Cursor(0, 9))
+    got = list(loader.epoch())
+    assert len(got) == 4 and loader.cursor == Cursor(2, 0)
+
+
+def test_fit_rewinds_mid_epoch_cursor_to_full_pass():
+    """fit() iterations must each average the WHOLE corpus: a loader left
+    mid-epoch by earlier SGD is rewound to its epoch start (regression:
+    the first iteration averaged only the epoch remainder)."""
+    mesh = make_host_mesh(1, 1)
+    loader = ShardedLoader(_zipf(batch_size=128, num_batches=4), mesh)
+    a = DPMREngine(_cfg(iterations=1), mesh)
+    a.fit_sgd(loader, steps=2)              # cursor now (0, 2)
+    pre_sgd_state = a.state
+    a.fit(loader)
+    b = DPMREngine(_cfg(iterations=1), mesh, state=pre_sgd_state)
+    b.fit(ShardedLoader(_zipf(batch_size=128, num_batches=4), mesh))
+    np.testing.assert_array_equal(np.asarray(a.state.cold),
+                                  np.asarray(b.state.cold))
+
+
+def test_engine_fit_loader_matches_batch_iter_fn():
+    """The loader path and the legacy batch_iter_fn path are numerically
+    identical (same batches, same update order)."""
+    mesh = make_host_mesh(1, 1)
+    src = _zipf(batch_size=128, num_batches=3)
+    a = DPMREngine(_cfg(), mesh)
+    a.fit(lambda: src.iter_batches())
+    b = DPMREngine(_cfg(), mesh)
+    b.fit(ShardedLoader(_zipf(batch_size=128, num_batches=3), mesh))
+    np.testing.assert_array_equal(np.asarray(a.state.cold),
+                                  np.asarray(b.state.cold))

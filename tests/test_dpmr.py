@@ -10,13 +10,20 @@ from repro.api import (DPMREngine, DistributionStrategy, hot_ids_from_corpus,
                        get_strategy, list_strategies, register_strategy)
 from repro.configs.base import DPMRConfig
 from repro.core import dpmr, hot_sharding, sparse
-from repro.data import sparse_corpus
+from repro.data import get_source, sparse_corpus
 from repro.launch.mesh import make_host_mesh
 
 F = 1 << 12
 SPEC = sparse_corpus.CorpusSpec(num_features=F, features_per_sample=16,
                                 signal_features=256, seed=0)
 STRATEGIES = ("a2a", "allgather", "psum_scatter")
+
+
+def _batches(batch_size, num_batches, start=0):
+    """Batches [start, num_batches) — the legacy `sparse_corpus.batches`
+    call convention, served by the zipf_sparse data source."""
+    src = get_source("zipf_sparse", spec=SPEC, batch_size=batch_size)
+    return src.iter_batches(start=start, limit=num_batches - start)
 
 
 def _cfg(**kw):
@@ -180,7 +187,7 @@ def test_registered_strategy_trains():
     register_strategy("test_custom", get_strategy("a2a"))
     mesh = make_host_mesh(1, 1)
     eng = DPMREngine(_cfg(distribution="test_custom"), mesh)
-    hist = eng.fit_sgd(sparse_corpus.batches(SPEC, 128, 2))
+    hist = eng.fit_sgd(_batches(128, 2))
     assert len(hist) == 2 and np.isfinite(hist[-1]["loss"])
 
 
@@ -194,7 +201,7 @@ def test_dpmr_matches_dense_oracle(distribution):
     """The full staged pipeline == numpy logistic regression GD."""
     mesh = make_host_mesh(1, 1)
     cfg = _cfg(distribution=distribution, max_hot=16)
-    batches = list(sparse_corpus.batches(SPEC, 128, 3))
+    batches = list(_batches(128, 3))
     hot = hot_ids_from_corpus(cfg, batches, mesh)
     eng = DPMREngine(cfg, mesh, hot_ids=hot)
     eng.fit(lambda: iter(batches))
@@ -213,7 +220,7 @@ def test_strategies_agree():
     """All registered built-in strategies produce identical parameters and
     losses on a 1-device mesh (they only differ in wire bytes)."""
     mesh = make_host_mesh(1, 1)
-    batches = list(sparse_corpus.batches(SPEC, 128, 3))
+    batches = list(_batches(128, 3))
     colds, hists = {}, {}
     for dist in STRATEGIES:
         eng = DPMREngine(_cfg(distribution=dist), mesh)
@@ -230,8 +237,8 @@ def test_sgd_training_reduces_loss_and_learns():
     mesh = make_host_mesh(1, 1)
     cfg = _cfg(optimizer="adagrad", learning_rate=2.0)
     eng = DPMREngine(cfg, mesh)
-    history = eng.fit_sgd(sparse_corpus.batches(SPEC, 256, 40))
-    ev = eng.evaluate(list(sparse_corpus.batches(SPEC, 256, 52, start=50)))
+    history = eng.fit_sgd(_batches(256, 40))
+    ev = eng.evaluate(list(_batches(256, 52, start=50)))
     first = np.mean([h["loss"] for h in history[:5]])
     last = np.mean([h["loss"] for h in history[-5:]])
     assert last < first - 0.01, (first, last)
@@ -241,7 +248,7 @@ def test_sgd_training_reduces_loss_and_learns():
 def test_classify_probabilities_valid():
     mesh = make_host_mesh(1, 1)
     eng = DPMREngine(_cfg(), mesh)
-    eng.fit_sgd(sparse_corpus.batches(SPEC, 128, 5))
+    eng.fit_sgd(_batches(128, 5))
     b = sparse_corpus.make_batch(SPEC, 128, seed=777)
     probs = eng.predict({"ids": b["ids"], "vals": b["vals"]})
     assert probs.shape == (128,)
@@ -262,7 +269,7 @@ def test_sparse_optimizer_registry():
         optimizers.get_sparse_optimizer("nope")
     # momentum trains and differs from plain sgd
     mesh = make_host_mesh(1, 1)
-    batches = list(sparse_corpus.batches(SPEC, 256, 10))
+    batches = list(_batches(256, 10))
     colds = {}
     for opt in ("sgd", "momentum"):
         eng = DPMREngine(_cfg(optimizer=opt, learning_rate=0.5), mesh)
@@ -281,7 +288,7 @@ def test_schedule_registry_on_sparse_face():
                learning_rate=1.0)
     eng = DPMREngine(cfg, mesh)
     assert eng.learning_rate() == 0.0          # step 0 of warmup
-    hist = eng.fit_sgd(sparse_corpus.batches(SPEC, 256, 8))
+    hist = eng.fit_sgd(_batches(256, 8))
     assert np.isfinite(hist[-1]["loss"])
     assert eng.learning_rate() < cfg.learning_rate   # cosine decayed
 
@@ -295,7 +302,7 @@ def test_engine_save_restore_roundtrip(tmp_path):
     mesh = make_host_mesh(1, 1)
     cfg = _cfg(optimizer="adagrad", learning_rate=2.0)
     eng = DPMREngine(cfg, mesh)
-    eng.fit_sgd(sparse_corpus.batches(SPEC, 128, 6))
+    eng.fit_sgd(_batches(128, 6))
     step = eng.save(str(tmp_path))
     assert step == 6
 
@@ -314,28 +321,56 @@ def test_engine_save_restore_roundtrip(tmp_path):
 
 
 # ---------------------------------------------------------------------------
-# deprecated fn-dict surface keeps working (one release)
+# deprecated fn-dict surface is GONE (one-release deprecation completed)
 # ---------------------------------------------------------------------------
 
 
-def test_legacy_sparse_lr_shim():
-    from repro.core import sparse_lr
+def test_legacy_fn_dict_surface_removed():
+    """core.sparse_lr and StepFns dict access finished their one-release
+    deprecation in the PR that added the data plane."""
+    with pytest.raises(ImportError):
+        from repro.core import sparse_lr  # noqa: F401
+    from repro.core import api as core_api
+
+    for gone in ("dpmr_train", "dpmr_train_sgd", "dpmr_classify", "evaluate"):
+        assert not hasattr(core_api, gone), gone
+    assert callable(core_api.hot_ids_from_corpus)   # re-homed, still public
 
     mesh = make_host_mesh(1, 1)
-    batches = list(sparse_corpus.batches(SPEC, 128, 2))
-    with pytest.warns(DeprecationWarning):
-        out = sparse_lr.dpmr_train(_cfg(iterations=1), mesh,
-                                   lambda: iter(batches), 128)
-    assert set(out) == {"state", "history", "fns"}
-    with pytest.warns(DeprecationWarning):
-        train_step = out["fns"]["train_step"]       # dict-style access
-    assert callable(train_step)
-    assert out["fns"].num_shards == 1
-    with pytest.warns(DeprecationWarning):
-        probs = sparse_lr.dpmr_classify(
-            out["state"], out["fns"],
-            {k: batches[0][k] for k in ("ids", "vals")}, mesh)
-    assert probs.shape == (128,)
+    fns = DPMREngine(_cfg(), mesh).step_fns(128)
+    with pytest.raises(TypeError):
+        fns["train_step"]           # dict-style access removed
+    assert callable(fns.train_step)
+
+
+# ---------------------------------------------------------------------------
+# engine regression guards (empty corpus, step-fns cache bound)
+# ---------------------------------------------------------------------------
+
+
+def test_fit_empty_corpus_raises_value_error():
+    """fit() with a batch_iter_fn that yields nothing must raise a clear
+    ValueError, not ZeroDivisionError (regression)."""
+    mesh = make_host_mesh(1, 1)
+    eng = DPMREngine(_cfg(), mesh)
+    with pytest.raises(ValueError, match="no batches"):
+        eng.fit(lambda: iter([]))
+
+
+def test_step_fns_cache_is_lru_bounded():
+    """Every distinct batch size compiles once, but only `max_cached_fns`
+    entries are retained (bucketed serving traffic must not leak)."""
+    mesh = make_host_mesh(1, 1)
+    eng = DPMREngine(_cfg(), mesh, max_cached_fns=2)
+    for bs in (64, 128, 192):
+        eng.step_fns(bs)
+    assert list(eng._fns) == [128, 192]      # 64 evicted (least recent)
+    eng.step_fns(128)                        # refresh 128
+    eng.step_fns(64)                         # evicts 192
+    assert list(eng._fns) == [128, 64]
+    assert eng.fns is eng._fns[64]           # .fns == most recently used
+    with pytest.raises(ValueError):
+        DPMREngine(_cfg(), mesh, max_cached_fns=0)
 
 
 # ---------------------------------------------------------------------------
@@ -348,7 +383,7 @@ def test_engine_with_pallas_kernels_matches_jnp():
     kernel is bit-identical to the jnp oracle path — the kernel is a true
     drop-in for the computeGradients map body."""
     mesh = make_host_mesh(1, 1)
-    batches = list(sparse_corpus.batches(SPEC, 128, 3))
+    batches = list(_batches(128, 3))
     outs = {}
     for impl in ("jnp", "pallas_interpret"):
         eng = DPMREngine(_cfg(), mesh, kernel_impl=impl)
@@ -387,7 +422,7 @@ def test_elastic_reshard_roundtrip():
 
     mesh = make_host_mesh(1, 1)
     eng = DPMREngine(_cfg(), mesh)
-    eng.fit_sgd(sparse_corpus.batches(SPEC, 128, 3))
+    eng.fit_sgd(_batches(128, 3))
     state2 = reshard_dpmr_state(eng.state, eng.cfg, mesh)
     np.testing.assert_array_equal(np.asarray(eng.state.cold),
                                   np.asarray(state2.cold))

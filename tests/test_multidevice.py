@@ -68,14 +68,13 @@ def test_dpmr_multi_shard_matches_single():
     out = run_py(COMMON + """
 from repro.api import DPMREngine, hot_ids_from_corpus
 from repro.configs.base import DPMRConfig
-from repro.data import sparse_corpus
+from repro.data import get_source
 
-spec = sparse_corpus.CorpusSpec(num_features=1<<12,
-                                features_per_sample=16,
-                                signal_features=256, seed=0)
+src = get_source("zipf_sparse", batch_size=256, num_features=1<<12,
+                 features_per_sample=16, signal_features=256, seed=0)
 cfg = DPMRConfig(num_features=1<<12, max_features_per_sample=16,
                  iterations=2, learning_rate=1.0, max_hot=32)
-batches = list(sparse_corpus.batches(spec, 256, 4))
+batches = list(src.iter_batches(limit=4))
 colds = {}
 for (d, m) in [(1,1),(4,2)]:
     mesh = make_host_mesh(d, m)

@@ -8,7 +8,7 @@ from repro import compat
 from repro.api import DPMREngine, hot_ids_from_corpus
 from repro.configs import ARCH_IDS, SHAPES
 from repro.configs.base import DPMRConfig
-from repro.data import sparse_corpus
+from repro.data import get_source
 from repro.launch.mesh import make_host_mesh
 from repro.models import registry
 
@@ -17,15 +17,14 @@ from repro.models import registry
 def test_paper_pipeline_end_to_end():
     """Algorithm 8 (train) + Algorithm 9 (classify): the full loop improves
     F over the majority-class baseline — the paper's Fig. 1 behaviour."""
-    spec = sparse_corpus.CorpusSpec(num_features=1 << 14,
-                                    features_per_sample=32,
-                                    signal_features=512, seed=0)
+    src = get_source("zipf_sparse", batch_size=512, num_features=1 << 14,
+                     features_per_sample=32, signal_features=512, seed=0)
     cfg = DPMRConfig(num_features=1 << 14, max_features_per_sample=32,
                      iterations=8, learning_rate=2.0, max_hot=64,
                      optimizer="adagrad")
     mesh = make_host_mesh(1, 1)
-    train = lambda: sparse_corpus.batches(spec, 512, 8)
-    test = list(sparse_corpus.batches(spec, 512, 52, start=50))
+    train = lambda: src.iter_batches(limit=8)
+    test = list(src.iter_batches(start=50, limit=2))
     hot = hot_ids_from_corpus(cfg, train(), mesh)
     evals = []
 
