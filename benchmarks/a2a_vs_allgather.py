@@ -1,20 +1,28 @@
 """The paper's central efficiency claim, quantified: distributing parameters
 BY SHUFFLE (a2a of requested rows) vs SHIPPING THE TABLE (all-gather), plus
-the psum_scatter hybrid, using each registered strategy's own wire model.
+the psum_scatter / hier_a2a / compressed_reduce variants, using each
+registered strategy's own two-tier wire model.
 
 Per device per step (forward + reduce collectives both counted; the seed
 version of this table counted only allgather's forward table movement, so
 its ag/a2a ratios were ~2x smaller):
-  a2a:          3 * P * cap * 4 bytes        (independent of |F|!)
-  allgather:    ~ 2 * |F| * 4 bytes          (grows with the feature space)
-  psum_scatter: 2 * P * cap * 4 + |F| * 4    (sparse fwd, dense reduce)
+  a2a:               3 * P * cap * 4 bytes     (independent of |F|!)
+  allgather:         ~ 2 * |F| * 4 bytes       (grows with the feature space)
+  psum_scatter:      2 * P * cap * 4 + |F| * 4 (sparse fwd, dense reduce)
+  hier_a2a:          shuffle on ICI; DCN only carries 2 * (|F|/P) * (Po-1)
+                     * 4 (pod mirror + per-pod partials)
+  compressed_reduce: sparse fwd + the dense reduce at int8 (~4x fewer
+                     reduce bytes than psum_scatter)
 
 This is exactly why DPMR scales to the paper's 50B-feature regime where a
 parameter-server-free broadcast cannot. All strategies are implemented in
-repro/api/strategies.py and verified to produce identical parameters
-(tests/test_dpmr.py::test_strategies_agree); here we sweep |F| and query
-each strategy's `bytes_per_device` cost model — the same buffer math the
-engine executes ((P, cap) f32 a2a buffers; the (F,) table).
+repro/api/strategies.py and the exact ones verified to produce identical
+parameters (tests/test_dpmr.py::test_strategies_agree); here we sweep |F|
+and query each strategy's `bytes_per_device` cost model — the same buffer
+math the engine executes ((P, cap) f32 a2a buffers; the (F,) table).
+`run(pods=2)` splits every figure into its ICI (inner) and DCN (outer)
+tiers; benchmarks/strategy_hierarchy.py records that split as a JSON
+artifact.
 """
 from __future__ import annotations
 
@@ -23,35 +31,52 @@ from repro.api.strategies import StrategyContext
 from repro.configs.base import DPMRConfig
 from repro.core import dpmr
 
+STRATEGIES = ("a2a", "allgather", "psum_scatter", "hier_a2a",
+              "compressed_reduce")
+
 
 def run(p: int = 256, batch: int = 1 << 16, k: int = 64,
-        strategies=("a2a", "allgather", "psum_scatter")):
+        strategies=STRATEGIES, pods: int = 1):
     rows = []
     for logf in (20, 24, 27, 30, 33):
         f = 1 << logf
         cfg = DPMRConfig(num_features=f, max_features_per_sample=k)
         cap = dpmr.capacity_for_shards(cfg, batch // p, p)
         ctx = StrategyContext(axes=(), num_shards=p,
-                              block_size=-(-f // p), capacity=cap)
+                              block_size=-(-f // p), capacity=cap,
+                              outer_shards=pods)
         row = {"features": f}
         for name in strategies:
-            row[name] = get_strategy(name).bytes_per_device(ctx)
+            wb = get_strategy(name).bytes_per_device(ctx)
+            row[name] = wb.total
+            row[name + "_tiers"] = {"inner": wb.inner, "outer": wb.outer}
         if "a2a" in row and "allgather" in row:
             row["ratio"] = row["allgather"] / row["a2a"]
         rows.append(row)
     return rows
 
 
-def main():
-    names = ("a2a", "allgather", "psum_scatter")
-    rows = run(strategies=names)
-    hdr = f"{'|F|':>12s}" + "".join(f" {n + ' B/dev':>18s}" for n in names)
-    print(hdr + f" {'ag/a2a':>9s}")
+def _print_table(rows, names, tier=None):
+    col = (lambda r, n: r[n + "_tiers"][tier]) if tier else \
+        (lambda r, n: r[n])
+    hdr = f"{'|F|':>12s}" + "".join(f" {n + ' B/dev':>22s}" for n in names)
+    print(hdr + (f" {'ag/a2a':>9s}" if tier is None else ""))
     for r in rows:
         line = f"{r['features']:>12.3e}"
-        line += "".join(f" {r[n]:>18.3e}" for n in names)
-        print(line + f" {r.get('ratio', float('nan')):>9.1f}")
-    return rows
+        line += "".join(f" {col(r, n):>22.3e}" for n in names)
+        if tier is None:
+            line += f" {r.get('ratio', float('nan')):>9.1f}"
+        print(line)
+
+
+def main():
+    rows = run()
+    print("== single-tier mesh (P=256, all ICI): total bytes/device ==")
+    _print_table(rows, STRATEGIES)
+    rows2 = run(p=512, batch=1 << 24, pods=2)
+    print("\n== two-pod mesh (P=512, Po=2, full-batch regime): DCN tier ==")
+    _print_table(rows2, STRATEGIES, tier="outer")
+    return rows + rows2
 
 
 if __name__ == "__main__":

@@ -42,7 +42,7 @@ def run(f: int = 1 << 16, p: int = 64, n: int = 1 << 15,
         imb = float(hot_sharding.load_imbalance(cold, p, block))
         ctx = StrategyContext(axes=(), num_shards=p, block_size=block,
                               capacity=cap)
-        a2a_bytes = get_strategy("a2a").bytes_per_device(ctx)
+        a2a_bytes = get_strategy("a2a").bytes_per_device(ctx).total
         rows.append({"max_hot": max_hot, "hot_hits": n_hot,
                      "overflow": int(r.overflow), "imbalance": imb,
                      "a2a_bytes": a2a_bytes})

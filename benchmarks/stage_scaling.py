@@ -22,69 +22,92 @@ from repro.core import dpmr
 
 
 def stage_costs(cfg: DPMRConfig, global_batch: int, p: int,
-                cap_factor: float = 4.0) -> dict:
-    """Per-device per-iteration cost model for each DPMR stage."""
+                cap_factor: float = 4.0, pods: int = 1) -> dict:
+    """Per-device per-iteration cost model for each DPMR stage.
+
+    Every collective stage's `shuffle_bytes` (total) is split into
+    `dcn_bytes` (crossing the `pod` outer tier — the (P - P/pods)/P
+    fraction of a flat collective's traffic addressed to other pods) and
+    the implicit ICI remainder, matching the strategies' two-tier
+    `bytes_per_device` contract."""
     k = cfg.max_features_per_sample
     b_loc = global_batch // p
     n = b_loc * k                       # feature slots per device
     f_loc = -(-cfg.num_features // p)
     cap = dpmr.capacity_for_shards(cfg, b_loc, p, cap_factor)
+    pi = p // max(pods, 1)
+    dcn = (p - pi) / p                  # cross-pod traffic fraction
+
+    def coll(byts):
+        return {"shuffle_bytes": byts, "dcn_bytes": int(byts * dcn)}
 
     stages = {
         # invertDocuments: sort-by-feature = O(n log n) compare ops, local
         "invertDocuments": {"flops": n * max(n.bit_length(), 1),
-                            "shuffle_bytes": 0},
+                            "shuffle_bytes": 0, "dcn_bytes": 0},
         # distributeParameters: request ids + response values, both a2a
-        "distributeParameters": {"flops": n,
-                                 "shuffle_bytes": 2 * p * cap * 4},
+        "distributeParameters": {"flops": n, **coll(2 * p * cap * 4)},
         # restoreDocuments: local unsort/gather
-        "restoreDocuments": {"flops": n, "shuffle_bytes": 0},
+        "restoreDocuments": {"flops": n, "shuffle_bytes": 0, "dcn_bytes": 0},
         # computeGradients: fused sigmoid-grad (2nk mul-add) + combiner
-        "computeGradients": {"flops": 4 * n, "shuffle_bytes": p * cap * 4},
+        "computeGradients": {"flops": 4 * n, **coll(p * cap * 4)},
         # updateParameters: owner-local SGD/adagrad update
-        "updateParameters": {"flops": 2 * f_loc, "shuffle_bytes": 0},
+        "updateParameters": {"flops": 2 * f_loc,
+                             "shuffle_bytes": 0, "dcn_bytes": 0},
         # hot psum: replicated head gradients, ring all-reduce
-        "hotSync": {"flops": cfg.max_hot,
-                    "shuffle_bytes": 2 * cfg.max_hot * 4},
+        "hotSync": {"flops": cfg.max_hot, **coll(2 * cfg.max_hot * 4)},
     }
     total = {"flops": sum(s["flops"] for s in stages.values()),
              "shuffle_bytes": sum(s["shuffle_bytes"]
-                                  for s in stages.values())}
+                                  for s in stages.values()),
+             "dcn_bytes": sum(s["dcn_bytes"] for s in stages.values())}
     return {"stages": stages, "total": total, "cap": cap, "b_loc": b_loc}
 
 
-def run(global_batch: int = 1 << 16, feature_space: int = 1 << 24):
+def run(global_batch: int = 1 << 16, feature_space: int = 1 << 24,
+        pods: int = 1):
     cfg = DPMRConfig(num_features=feature_space, max_features_per_sample=64)
     shard_counts = [32, 64, 128, 256, 512]
     rows = []
     base = None
     for p in shard_counts:
-        c = stage_costs(cfg, global_batch, p)
+        c = stage_costs(cfg, global_batch, p, pods=pods)
         t = c["total"]
         if base is None:
             base = t
         rows.append({
             "shards": p,
+            "pods": pods,
             "flops_per_dev": t["flops"],
             "shuffle_bytes_per_dev": t["shuffle_bytes"],
+            "dcn_bytes_per_dev": t["dcn_bytes"],
             "speedup_vs_first": base["flops"] / t["flops"],
             "stages": {k: v for k, v in c["stages"].items()},
         })
     return rows
 
 
-def main():
-    rows = run()
+def _print_rows(rows):
     print(f"{'P':>5s} {'flops/dev':>12s} {'shuffle B/dev':>14s} "
-          f"{'speedup':>8s} {'linear?':>8s}")
+          f"{'DCN B/dev':>12s} {'speedup':>8s} {'linear?':>8s}")
     p0 = rows[0]["shards"]
     for r in rows:
         ideal = r["shards"] / p0
         print(f"{r['shards']:>5d} {r['flops_per_dev']:>12.3e} "
               f"{r['shuffle_bytes_per_dev']:>14.3e} "
+              f"{r['dcn_bytes_per_dev']:>12.3e} "
               f"{r['speedup_vs_first']:>8.2f} "
               f"{r['speedup_vs_first']/ideal:>7.0%}")
-    return rows
+
+
+def main():
+    rows = run()
+    print("== single pod (all shuffle bytes on ICI) ==")
+    _print_rows(rows)
+    rows2 = run(pods=2)
+    print("\n== two pods (flat collectives: cross-pod fraction on DCN) ==")
+    _print_rows(rows2)
+    return rows + rows2
 
 
 if __name__ == "__main__":

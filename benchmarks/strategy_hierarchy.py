@@ -1,0 +1,136 @@
+"""Hierarchy & compression benchmark: the two-tier wire model of every
+registered strategy on the multi-pod production geometry, plus convergence
+parity of the new strategies against the paper-faithful `a2a`.
+
+Emits `BENCH_strategy_hierarchy.json` with
+
+  wire         per-strategy inner (ICI) / outer (DCN) bytes per device per
+               step at the paper's full-batch regime on the (2, 16, 16)
+               production mesh (P=512, Po=2). The headline claim recorded
+               here: `hier_a2a` crosses the DCN tier with strictly fewer
+               bytes than flat `a2a` — it ships the table block (mirror +
+               per-pod partials) instead of the shuffled request volume.
+  crossover    the same sweep over |F|, showing where the table block
+               outgrows the request volume and flat a2a wins DCN again
+               (hier_a2a trades ICI volume for that DCN reduction).
+  convergence  final loss of each strategy on the Fig.-1 convergence
+               benchmark (benchmarks/convergence.py), with parity vs a2a.
+               The exact strategies are bit-identical; compressed_reduce
+               must land within 1% (error feedback at work).
+
+Run: PYTHONPATH=src python benchmarks/strategy_hierarchy.py
+"""
+from __future__ import annotations
+
+import json
+
+from repro.api import get_strategy, list_strategies
+from repro.api.strategies import StrategyContext
+from repro.configs.base import DPMRConfig
+from repro.core import dpmr
+
+# paper-regime headline geometry: 2-pod production mesh, full-batch GD
+P, PODS = 512, 2
+GLOBAL_BATCH = 1 << 24
+K = 64
+FEATURES = 1 << 30
+
+
+def _ctx(features: int, p: int = P, pods: int = PODS,
+         batch: int = GLOBAL_BATCH) -> StrategyContext:
+    cfg = DPMRConfig(num_features=features, max_features_per_sample=K)
+    cap = dpmr.capacity_for_shards(cfg, batch // p, p)
+    return StrategyContext(axes=(), num_shards=p,
+                           block_size=-(-features // p), capacity=cap,
+                           outer_shards=pods)
+
+
+def wire_rows(features: int = FEATURES) -> list:
+    ctx = _ctx(features)
+    rows = []
+    for name in list_strategies():
+        wb = get_strategy(name).bytes_per_device(ctx)
+        rows.append({"strategy": name, "features": features,
+                     "shards": P, "pods": PODS, "capacity": ctx.capacity,
+                     "inner_bytes": int(wb.inner),
+                     "outer_bytes": int(wb.outer),
+                     "total_bytes": int(wb.total)})
+    return rows
+
+
+def crossover_rows() -> list:
+    """DCN bytes of hier_a2a vs flat a2a over |F|: hier wins while the
+    per-device table block stays below the shuffled request volume."""
+    rows = []
+    for logf in (24, 27, 30, 33):
+        ctx = _ctx(1 << logf)
+        a2a = get_strategy("a2a").bytes_per_device(ctx)
+        hier = get_strategy("hier_a2a").bytes_per_device(ctx)
+        rows.append({"features": 1 << logf,
+                     "a2a_outer": int(a2a.outer),
+                     "hier_outer": int(hier.outer),
+                     "hier_wins_dcn": bool(hier.outer < a2a.outer)})
+    return rows
+
+
+def convergence_parity(iterations: int = 6) -> dict:
+    try:
+        from benchmarks import convergence      # harness import (run.py)
+    except ImportError:
+        import convergence                      # direct script execution
+
+    out = {}
+    for name in ("a2a", "allgather", "psum_scatter", "hier_a2a",
+                 "compressed_reduce"):
+        hist = convergence.run(iterations=iterations, distribution=name)
+        out[name] = {"final_loss": hist[-1]["loss"],
+                     "final_f_avg": hist[-1]["f_avg"]}
+    base = out["a2a"]["final_loss"]
+    for name, rec in out.items():
+        rec["loss_vs_a2a_pct"] = abs(rec["final_loss"] - base) / base * 100
+    return out
+
+
+def run(write_json: bool = True, iterations: int = 6) -> dict:
+    wire = wire_rows()
+    by_name = {r["strategy"]: r for r in wire}
+    assert by_name["hier_a2a"]["outer_bytes"] < \
+        by_name["a2a"]["outer_bytes"], (
+        "hier_a2a must cross DCN with strictly fewer bytes than flat a2a "
+        "at the headline geometry", by_name)
+    results = {
+        "geometry": {"shards": P, "pods": PODS,
+                     "global_batch": GLOBAL_BATCH,
+                     "features": FEATURES, "features_per_sample": K},
+        "wire": wire,
+        "crossover": crossover_rows(),
+        "convergence": convergence_parity(iterations),
+    }
+    if write_json:
+        with open("BENCH_strategy_hierarchy.json", "w") as fh:
+            json.dump(results, fh, indent=2)
+    return results
+
+
+def main():
+    res = run()
+    print(f"{'strategy':>18s} {'ICI B/dev':>12s} {'DCN B/dev':>12s}")
+    for r in res["wire"]:
+        print(f"{r['strategy']:>18s} {r['inner_bytes']:>12.3e} "
+              f"{r['outer_bytes']:>12.3e}")
+    print("\nDCN crossover (a2a vs hier_a2a outer bytes):")
+    for r in res["crossover"]:
+        print(f"  |F|=2^{r['features'].bit_length() - 1}: "
+              f"a2a {r['a2a_outer']:.3e}  hier {r['hier_outer']:.3e}  "
+              f"hier wins: {r['hier_wins_dcn']}")
+    print("\nconvergence parity vs a2a (final loss):")
+    for name, rec in res["convergence"].items():
+        print(f"  {name:>18s} loss {rec['final_loss']:.4f} "
+              f"({rec['loss_vs_a2a_pct']:.3f}% off a2a), "
+              f"F {rec['final_f_avg']:.3f}")
+    print("wrote BENCH_strategy_hierarchy.json")
+    return res
+
+
+if __name__ == "__main__":
+    main()

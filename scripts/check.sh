@@ -15,7 +15,8 @@ echo "== strategy/source-registry / engine smoke =="
 python -c "
 from repro.api import DPMREngine, list_strategies, get_strategy
 names = list_strategies()
-assert {'a2a', 'allgather', 'psum_scatter'} <= set(names), names
+assert {'a2a', 'allgather', 'psum_scatter', 'hier_a2a',
+        'compressed_reduce'} <= set(names), names
 for n in names:
     get_strategy(n)
 from repro.data import list_sources, get_source
@@ -26,6 +27,30 @@ assert {'sgd', 'adagrad', 'momentum'} <= set(optimizers.SPARSE_OPTIMIZERS)
 assert {'constant', 'warmup_cosine'} <= set(schedules.SCHEDULES)
 print('registries OK:', names, snames)
 "
+
+echo "== strategy wire-model smoke (every strategy, 1-device mesh, both tiers) =="
+python -c "
+from repro.api import list_strategies, get_strategy
+from repro.api.strategies import WireBytes
+from repro.configs.base import DPMRConfig
+from repro.core import dpmr
+from repro.launch.mesh import make_host_mesh
+
+mesh = make_host_mesh(1, 1)
+cfg = DPMRConfig(num_features=1 << 12, max_features_per_sample=16)
+ctx = dpmr.make_strategy_context(cfg, mesh,
+                                 cap=dpmr.capacity(cfg, 128, mesh))
+for n in list_strategies():
+    wb = get_strategy(n).bytes_per_device(ctx)
+    assert isinstance(wb, WireBytes), (n, type(wb))
+    assert wb.inner >= 0 and wb.outer >= 0, (n, wb)
+    assert wb.total == wb.inner + wb.outer, (n, wb)
+    assert wb.outer == 0, ('single-pod mesh must not cross DCN', n, wb)
+print('wire models OK (inner/outer tiers):', list_strategies())
+"
+
+echo "== docs link-check (every docs/*.md code path exists) =="
+python scripts/check_docs.py
 
 echo "== quickstart smoke (engine + data plane end to end) =="
 python examples/quickstart.py

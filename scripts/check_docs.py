@@ -1,0 +1,71 @@
+#!/usr/bin/env python
+"""Docs link-check: every code path referenced from docs/*.md must exist.
+
+Two kinds of references are validated in backtick spans:
+  - file paths (`src/repro/core/dpmr.py`, `scripts/check.sh`,
+    `benchmarks/convergence.py`, optionally with a `::symbol` suffix)
+  - dotted module paths (`repro.api.strategies`, resolved under src/;
+    trailing attribute components are allowed once the module resolves)
+
+Run directly (exits non-zero listing broken references) or through
+scripts/check.sh; tests/test_docs.py runs it in the tier-1 suite.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+FILE_REF = re.compile(
+    r"`([A-Za-z0-9_.\-]+(?:/[A-Za-z0-9_.\-]+)+\.(?:py|md|sh|json))"
+    r"(?:::[A-Za-z0-9_.]+)?`")
+MODULE_REF = re.compile(r"`(repro(?:\.[a-z_][a-z0-9_]*)+)`")
+
+
+def _module_exists(dotted: str) -> bool:
+    """True iff a leading prefix of `dotted` resolves to a module under
+    src/ (the remaining components may be attributes)."""
+    base = ROOT / "src"
+    parts = dotted.split(".")
+    for depth, comp in enumerate(parts):
+        if (base / comp).is_dir():
+            base = base / comp
+            continue
+        if (base / (comp + ".py")).exists():
+            return True
+        # unresolved component: fine only if at least repro.<x> resolved
+        return depth >= 2
+    return True     # the whole dotted path is a package
+
+
+def check(root: pathlib.Path = ROOT) -> list:
+    errors = []
+    docs = sorted((root / "docs").glob("*.md"))
+    if not docs:
+        return [f"no docs found under {root / 'docs'}"]
+    for doc in docs:
+        text = doc.read_text()
+        for m in FILE_REF.finditer(text):
+            if not (root / m.group(1)).exists():
+                errors.append(f"{doc.name}: missing file {m.group(1)}")
+        for m in MODULE_REF.finditer(text):
+            if not _module_exists(m.group(1)):
+                errors.append(f"{doc.name}: unresolvable module "
+                              f"{m.group(1)}")
+    return errors
+
+
+def main() -> int:
+    errors = check()
+    for e in errors:
+        print(f"DOCS LINK-CHECK: {e}", file=sys.stderr)
+    if not errors:
+        print(f"docs link-check OK "
+              f"({len(sorted((ROOT / 'docs').glob('*.md')))} files)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

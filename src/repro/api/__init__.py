@@ -27,9 +27,12 @@ from repro.data import (
 from repro.api.strategies import (
     AllGatherStrategy,
     AllToAllStrategy,
+    CompressedReduceStrategy,
     DistributionStrategy,
+    HierarchicalA2AStrategy,
     PsumScatterStrategy,
     StrategyContext,
+    WireBytes,
     get_strategy,
     list_strategies,
     register_strategy,
@@ -37,9 +40,10 @@ from repro.api.strategies import (
 from repro.core.dpmr import DPMRState, StepFns, init_state, make_step_fns
 
 __all__ = [
-    "AllGatherStrategy", "AllToAllStrategy", "Cursor", "DPMREngine",
-    "DPMRState", "DataSource", "DistributionStrategy", "PsumScatterStrategy",
-    "ShardedLoader", "StepFns", "StrategyContext", "get_source",
+    "AllGatherStrategy", "AllToAllStrategy", "CompressedReduceStrategy",
+    "Cursor", "DPMREngine", "DPMRState", "DataSource",
+    "DistributionStrategy", "HierarchicalA2AStrategy", "PsumScatterStrategy",
+    "ShardedLoader", "StepFns", "StrategyContext", "WireBytes", "get_source",
     "get_strategy", "hot_ids_from_corpus", "init_state", "list_sources",
     "list_strategies", "make_step_fns", "put_batch", "register_source",
     "register_strategy", "write_file_corpus",

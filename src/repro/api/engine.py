@@ -355,6 +355,14 @@ class DPMREngine:
         with compat.set_mesh(self.mesh):
             self.state, manifest = Checkpointer(directory).restore(
                 self.state, step=step)
+        saved_dist = manifest.get("extra", {}).get("distribution")
+        if saved_dist is not None and saved_dist != self.cfg.distribution:
+            warnings.warn(
+                f"checkpoint was trained with distribution={saved_dist!r} "
+                f"but this engine uses {self.cfg.distribution!r}; the "
+                "persistent strategy carry (DPMRState.strat) may be "
+                "meaningless or mis-shaped for the new strategy",
+                RuntimeWarning, stacklevel=2)
         if loader is not None:
             self._loader = loader      # attach even for cursor-less ckpts,
         else:                          # so the NEXT save records a cursor

@@ -7,52 +7,112 @@ registry-backed component: a `DistributionStrategy` implements the two
 collective-bearing stages of the per-device pipeline, and `core.dpmr` asks
 the registry for whichever one `DPMRConfig.distribution` names.
 
-Built-ins (bytes/device counts BOTH the forward and the reduce collective;
-the seed's benchmark counted only the forward table movement for allgather):
+The mesh is two-tier: `ctx.inner_axes` (ICI, fast) and `ctx.outer_axes`
+(DCN, ~10x slower; the `pod` axis when present). Every strategy's
+`bytes_per_device` wire model is therefore two-tier too — it returns a
+`WireBytes(inner, outer)` counting the bytes a device RECEIVES per step,
+classified by whether the sender sits in the same inner group (ICI) or in
+another outer group (DCN).
 
-  a2a           the paper's shuffle: route_build + all_to_all of requested
-                rows, reverse all_to_all of per-feature gradient sums.
-                Bytes/device = 3 * P * cap * 4, independent of |F|.
-  allgather     the ship-the-table strawman: all_gather the full table for
-                lookups, dense scatter-add + psum_scatter for the reduce.
-                Bytes/device ~ 2 * |F| * 4.
-  psum_scatter  hybrid: sparse a2a shuffle forward (cheap lookups), dense
-                psum_scatter reduce (one fused collective, no reverse
-                shuffle). Bytes/device ~ 2 * P * cap * 4 + |F| * 4.
+Built-ins (inner+outer == the legacy single-number model; P = shards,
+Pi = inner shards, cap = a2a capacity, |F|/P = block rows per device):
 
-All strategies produce identical parameters when capacity does not overflow
-(tested in tests/test_dpmr.py); they differ only in wire bytes and in how
-capacity-overflowed features degrade (a2a drops their gradients, the dense
-reducers keep them).
+  a2a              the paper's shuffle: route_build + all_to_all of
+                   requested rows, reverse all_to_all of per-feature
+                   gradient sums. Total 3*P*cap*4, |F|-independent; the
+                   (P-Pi)/P fraction addressed to other pods crosses DCN.
+  allgather        the ship-the-table strawman: all_gather the full table,
+                   dense scatter-add + psum_scatter reduce.
+                   Total ~2*|F|*4, of which the blocks owned by other pods
+                   (2*(|F|/P)*(P-Pi)*4) cross DCN.
+  psum_scatter     hybrid: sparse a2a shuffle forward, dense psum_scatter
+                   reduce. 2*P*cap*4 + (|F|/P)*(P-1)*4.
+  hier_a2a         two-level exchange: each device mirrors its inner-peer
+                   blocks across pods (all_gather over `pod`), the sparse
+                   all-to-all then runs ONLY inside the fast inner axes,
+                   and the reduce crosses DCN once with the already-reduced
+                   per-pod partials (psum_scatter of the owner blocks).
+                   DCN bytes = 2*(|F|/P)*(Po-1)*4, independent of the batch
+                   — strictly below flat a2a's 3*(P-Pi)*cap*4 whenever the
+                   per-device table block is smaller than the shuffled
+                   request volume (the paper's huge-batch regime).
+  compressed_reduce sparse a2a forward; the dense reduce puts int8 on the
+                   wire (optim/compression.py block quantization) with
+                   error feedback carried in `DPMRState.strat` and
+                   persisted by engine save()/restore(). ~4x fewer reduce
+                   bytes than psum_scatter at f32.
+
+All exact strategies produce identical parameters when capacity does not
+overflow (tested in tests/test_dpmr.py); `compressed_reduce` tracks them to
+within quantization error (convergence parity is benchmarked in
+benchmarks/strategy_hierarchy.py). They differ in wire bytes per tier and
+in how capacity-overflowed features degrade.
 
 Third parties extend the seam with either
 
     @register_strategy("my_strategy")
     class MyStrategy(DistributionStrategy): ...
 
-or `register_strategy("name", instance)`.
+or `register_strategy("name", instance)` — the authoring contract (method
+semantics, the two-tier wire model, persistent carry state) is documented
+in docs/strategies.md with a runnable example.
 
 Every method runs INSIDE shard_map: `cold_loc` is this device's block of the
-feature table and collectives run over `ctx.axes`.
+feature table and collectives run over `ctx.axes` (or a tier subset).
 """
 from __future__ import annotations
 
 import copy
-from typing import Dict, List, NamedTuple, Tuple
+from typing import Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import sparse
+from repro.optim import compression
+
+
+class WireBytes(NamedTuple):
+    """Per-device per-step wire cost, split by mesh tier.
+
+    `inner` travels the fast intra-pod interconnect (ICI); `outer` crosses
+    the slow inter-pod network (DCN). `total` is the legacy single number.
+    """
+
+    inner: int
+    outer: int
+
+    @property
+    def total(self) -> int:
+        return self.inner + self.outer
 
 
 class StrategyContext(NamedTuple):
-    """Static per-step geometry handed to every strategy method."""
+    """Static per-step geometry handed to every strategy method.
+
+    `axes` are ALL mesh axes the pipeline is manual over; they factor into
+    `outer_axes` (the DCN-crossing tier, `("pod",)` on multi-pod meshes,
+    `()` otherwise) followed by `inner_axes` (everything else, ICI). The
+    outer axes are always a LEADING prefix of `axes` (launch.mesh.tier_axes
+    enforces this), so the linear device index over `axes` decomposes as
+    `outer_index * inner_shards + inner_index`.
+
+    Analytic callers (benchmarks, dry-runs) may leave the axis names empty
+    and set only the shard counts; only the collectives need real names.
+    """
 
     axes: Tuple[str, ...]    # mesh axis names the pipeline is manual over
     num_shards: int          # P = product of mesh axis sizes
     block_size: int          # rows of the feature table per device
     capacity: int            # per-(src,dst) a2a slots for cold features
+    inner_axes: Tuple[str, ...] = ()   # fast tier (ICI); () = all of `axes`
+    outer_axes: Tuple[str, ...] = ()   # slow tier (DCN); () = single tier
+    outer_shards: int = 1    # Po = product of outer axis sizes
+
+    @property
+    def inner_shards(self) -> int:
+        """Pi = devices per pod (over the fast tier)."""
+        return self.num_shards // max(self.outer_shards, 1)
 
 
 class DistributionStrategy:
@@ -61,6 +121,13 @@ class DistributionStrategy:
     `distribute` returns the per-slot cold parameters plus an opaque
     forward-state dict that the engine threads into `reduce`; `overflow`
     must be a scalar int32 in that dict (0 when the strategy cannot drop).
+
+    A strategy may carry persistent per-device state across steps (e.g.
+    compression error feedback): override `init_carry` to return its
+    zero value — a 1-D f32 array of static length. The engine then stores
+    it in `DPMRState.strat` (checkpointed by save()/restore()), passes the
+    current value to `reduce` as `fwd["carry"]`, and expects `reduce` to
+    return `(grad_cold, new_carry)` instead of the bare gradient.
     """
 
     name: str = "base"
@@ -73,8 +140,13 @@ class DistributionStrategy:
                grads_flat: jax.Array, fwd: dict) -> jax.Array:
         raise NotImplementedError
 
-    # wire-cost model (bytes per device per step), used by the benchmarks
-    def bytes_per_device(self, ctx: StrategyContext) -> int:
+    def init_carry(self, ctx: StrategyContext) -> Optional[jax.Array]:
+        """Zero value of the per-device persistent state (None = stateless)."""
+        return None
+
+    # two-tier wire-cost model (bytes per device per step); benchmarks,
+    # launch/dryrun.py and the scripts/check.sh smoke consume both tiers
+    def bytes_per_device(self, ctx: StrategyContext) -> WireBytes:
         raise NotImplementedError
 
 
@@ -95,13 +167,18 @@ def _sparse_distribute(ctx, cold_loc, cold_ids):
                         "cold_ids": cold_ids, "overflow": routing.overflow}
 
 
+def _dense_accumulate(ctx, cold_loc, grads_flat, cold_ids):
+    """Local dense accumulation: the (F,) per-device gradient vector."""
+    f = cold_loc.shape[0] * ctx.num_shards
+    return jnp.zeros((f,), jnp.float32).at[
+        jnp.where(cold_ids >= 0, cold_ids, f)
+    ].add(jnp.where(cold_ids >= 0, grads_flat, 0.0), mode="drop")
+
+
 def _dense_reduce(ctx, cold_loc, grads_flat, cold_ids):
     """Dense accumulate + psum_scatter: every device folds its gradients
     into a full-length vector; one collective delivers owner blocks."""
-    f = cold_loc.shape[0] * ctx.num_shards
-    gfull = jnp.zeros((f,), jnp.float32).at[
-        jnp.where(cold_ids >= 0, cold_ids, f)
-    ].add(jnp.where(cold_ids >= 0, grads_flat, 0.0), mode="drop")
+    gfull = _dense_accumulate(ctx, cold_loc, grads_flat, cold_ids)
     return jax.lax.psum_scatter(gfull, ctx.axes, scatter_dimension=0,
                                 tiled=True)
 
@@ -122,7 +199,11 @@ class AllToAllStrategy(DistributionStrategy):
                                        _owner_base(ctx))
 
     def bytes_per_device(self, ctx):
-        return 3 * ctx.num_shards * ctx.capacity * 4
+        # 3 (P, cap) f32 buffers (requests, responses, grad sums); the
+        # buckets addressed to other pods cross DCN
+        pi = ctx.inner_shards
+        outer = 3 * (ctx.num_shards - pi) * ctx.capacity * 4
+        return WireBytes(inner=3 * pi * ctx.capacity * 4, outer=outer)
 
 
 class AllGatherStrategy(DistributionStrategy):
@@ -141,9 +222,13 @@ class AllGatherStrategy(DistributionStrategy):
         return _dense_reduce(ctx, cold_loc, grads_flat, fwd["cold_ids"])
 
     def bytes_per_device(self, ctx):
-        # forward ring all_gather + reduce psum_scatter, each moving
-        # (P-1) blocks of |F|/P rows through every device
-        return 2 * ctx.block_size * (ctx.num_shards - 1) * 4
+        # forward ring all_gather + reduce psum_scatter: every device
+        # receives the (P-1) remote blocks of |F|/P rows; the (P-Pi)
+        # blocks owned by other pods cross DCN
+        pi = ctx.inner_shards
+        inner = 2 * ctx.block_size * (pi - 1) * 4
+        outer = 2 * ctx.block_size * (ctx.num_shards - pi) * 4
+        return WireBytes(inner=inner, outer=outer)
 
 
 class PsumScatterStrategy(DistributionStrategy):
@@ -164,8 +249,180 @@ class PsumScatterStrategy(DistributionStrategy):
         return _dense_reduce(ctx, cold_loc, grads_flat, fwd["cold_ids"])
 
     def bytes_per_device(self, ctx):
-        return (2 * ctx.num_shards * ctx.capacity * 4
-                + ctx.block_size * (ctx.num_shards - 1) * 4)
+        pi = ctx.inner_shards
+        po_cross = ctx.num_shards - pi
+        inner = (2 * pi * ctx.capacity * 4
+                 + ctx.block_size * (pi - 1) * 4)
+        outer = (2 * po_cross * ctx.capacity * 4
+                 + ctx.block_size * po_cross * 4)
+        return WireBytes(inner=inner, outer=outer)
+
+
+def _hier_remap(cold_ids: jax.Array, po: int, pi: int,
+                block: int) -> jax.Array:
+    """Bijection global id -> (inner_owner, mirror_row) contiguous space.
+
+    Row r is owned by device d = r // block with pod q = d // Pi and inner
+    index i = d % Pi. After the pod-axis all_gather, device (*, i) holds a
+    mirror of all pods' i-blocks, laid out pod-major; relabelling
+    r' = i * (Po*block) + q*block + (r % block) makes mirror ownership
+    contiguous-block again (block size Po*block over Pi owners), so the
+    unmodified routing kernels drive the inner-only exchange.
+    """
+    q = cold_ids // (pi * block)
+    inner_owner = (cold_ids // block) % pi
+    off = cold_ids % block
+    remapped = inner_owner * (po * block) + q * block + off
+    return jnp.where(cold_ids >= 0, remapped, -1)
+
+
+class HierarchicalA2AStrategy(DistributionStrategy):
+    """Two-level exchange over the (pod, ICI) tiers.
+
+    Forward: all_gather over `outer_axes` mirrors, on every device, the
+    table blocks of its inner-peer devices in every pod (Po blocks); the
+    sparse request/response all-to-all then runs ONLY over `inner_axes`,
+    against the mirror, with ids relabelled by `_hier_remap`. Reduce: the
+    reverse inner shuffle accumulates per-feature sums into the mirror
+    layout, then ONE psum_scatter over `outer_axes` crosses DCN carrying
+    the already-reduced per-pod partials and lands each owner's block.
+
+    With a single pod (Po == 1) this is bit-identical to `a2a`. The inner
+    capacity is Po x the flat capacity (requests concentrate on Pi owners
+    instead of P), so overflow behaviour matches `a2a` at equal headroom.
+    """
+
+    name = "hier_a2a"
+
+    def _inner_capacity(self, ctx, n):
+        return int(min(n, ctx.capacity * ctx.outer_shards))
+
+    def distribute(self, ctx, cold_loc, cold_ids):
+        po, pi = ctx.outer_shards, ctx.inner_shards
+        if po == 1:
+            return _sparse_distribute(ctx, cold_loc, cold_ids)
+        block = ctx.block_size
+        mirror = jax.lax.all_gather(cold_loc, ctx.outer_axes,
+                                    tiled=True)            # (Po*block,)
+        rem = _hier_remap(cold_ids, po, pi, block)
+        if pi == 1:
+            # one device per pod: the mirror is the whole table, look up
+            # locally; DCN still only carries the dense block exchanges
+            theta_cold = jnp.where(cold_ids >= 0,
+                                   mirror[jnp.clip(rem, 0)], 0.0)
+            return theta_cold, {"cold_ids": cold_ids, "rem_ids": rem,
+                                "overflow": jnp.zeros((), jnp.int32)}
+        cap_i = self._inner_capacity(ctx, cold_ids.shape[0])
+        routing = sparse.route_build(rem, pi, po * block, cap_i)
+        req_recv = jax.lax.all_to_all(routing.req_ids, ctx.inner_axes,
+                                      0, 0, tiled=True)
+        base = jax.lax.axis_index(ctx.inner_axes) * (po * block)
+        resp = sparse.owner_apply(req_recv, mirror, base)
+        resp_back = jax.lax.all_to_all(resp, ctx.inner_axes, 0, 0,
+                                       tiled=True)
+        theta_cold = sparse.route_return(routing, resp_back)
+        return theta_cold, {"routing": routing, "req_recv": req_recv,
+                            "cold_ids": cold_ids,
+                            "overflow": routing.overflow}
+
+    def reduce(self, ctx, cold_loc, grads_flat, fwd):
+        po, pi = ctx.outer_shards, ctx.inner_shards
+        if po == 1:
+            send = sparse.combine_grads(fwd["routing"], grads_flat)
+            recv = jax.lax.all_to_all(send, ctx.axes, 0, 0, tiled=True)
+            return sparse.owner_accumulate(fwd["req_recv"], recv,
+                                           jnp.zeros_like(cold_loc),
+                                           _owner_base(ctx))
+        block = ctx.block_size
+        if pi == 1:
+            rem = fwd["rem_ids"]
+            f_mirror = po * block
+            mirror_acc = jnp.zeros((f_mirror,), jnp.float32).at[
+                jnp.where(rem >= 0, rem, f_mirror)
+            ].add(jnp.where(rem >= 0, grads_flat, 0.0), mode="drop")
+        else:
+            send = sparse.combine_grads(fwd["routing"], grads_flat)
+            recv = jax.lax.all_to_all(send, ctx.inner_axes, 0, 0,
+                                      tiled=True)
+            base = jax.lax.axis_index(ctx.inner_axes) * (po * block)
+            mirror_acc = sparse.owner_accumulate(
+                fwd["req_recv"], recv,
+                jnp.zeros((po * block,), grads_flat.dtype), base)
+        # per-pod partials cross DCN exactly once: segment q of the mirror
+        # accumulator is pod q's owner block, summed across pods
+        return jax.lax.psum_scatter(mirror_acc, ctx.outer_axes,
+                                    scatter_dimension=0, tiled=True)
+
+    def bytes_per_device(self, ctx):
+        po, pi = ctx.outer_shards, ctx.inner_shards
+        # inner: the full sparse shuffle at Po-scaled capacity (all ICI)
+        inner = 3 * pi * (ctx.capacity * po) * 4 if pi > 1 else 0
+        # outer: forward pod all_gather of the local block + reduce
+        # psum_scatter of per-pod partials, both ring over Po
+        outer = 2 * ctx.block_size * (po - 1) * 4
+        return WireBytes(inner=inner, outer=outer)
+
+
+class CompressedReduceStrategy(DistributionStrategy):
+    """Sparse forward + int8 block-quantized dense reduce with error
+    feedback (the optim/compression.py scheme on the strategy seam).
+
+    Reduce path: the (F,) per-device gradient vector is compensated with
+    the carried error state, block-quantized (`optim.compression.quantize`,
+    one f32 scale per `compression.BLOCK` values), and exchanged as int8 by
+    destination segment (all_to_all); receivers dequantize and sum their
+    own block. The residual `(g + err) - dequant(q)` becomes the new carry,
+    so quantization error is re-injected next step (EF-SGD / 1-bit Adam
+    lineage) and SGD/Adagrad convergence tracks the exact strategies.
+
+    The carry is per-device and |F|-sized — the engine persists it in
+    `DPMRState.strat` and it rides through save()/restore() so a resumed
+    run continues bit-identically.
+    """
+
+    name = "compressed_reduce"
+
+    def distribute(self, ctx, cold_loc, cold_ids):
+        return _sparse_distribute(ctx, cold_loc, cold_ids)
+
+    def init_carry(self, ctx):
+        return jnp.zeros((ctx.num_shards * ctx.block_size,), jnp.float32)
+
+    def _padded_block(self, ctx) -> int:
+        qb = compression.BLOCK
+        return -(-ctx.block_size // qb) * qb
+
+    def reduce(self, ctx, cold_loc, grads_flat, fwd):
+        p = ctx.num_shards
+        block = ctx.block_size
+        qb = compression.BLOCK
+        bp = self._padded_block(ctx)
+        gfull = _dense_accumulate(ctx, cold_loc, grads_flat,
+                                  fwd["cold_ids"])
+        comp = gfull + fwd["carry"]                        # error feedback
+        seg = jnp.pad(comp.reshape(p, block), ((0, 0), (0, bp - block)))
+        q, scale = compression.quantize(seg.reshape(-1))   # (p*bp/qb, qb)
+        new_carry = comp - compression.dequantize(
+            q, scale, p * bp).reshape(p, bp)[:, :block].reshape(-1)
+        # int8 on the wire: exchange by destination segment, dequantize and
+        # sum the received contributions to this device's block
+        q_recv = jax.lax.all_to_all(q.reshape(p, bp), ctx.axes, 0, 0,
+                                    tiled=True)            # (p, bp) int8
+        s_recv = jax.lax.all_to_all(scale.reshape(p, bp // qb), ctx.axes,
+                                    0, 0, tiled=True)      # (p, bp/qb) f32
+        deq = (q_recv.astype(jnp.float32).reshape(p, bp // qb, qb)
+               * s_recv[..., None])
+        grad = deq.reshape(p, bp)[:, :block].sum(axis=0)
+        return grad, new_carry
+
+    def bytes_per_device(self, ctx):
+        pi = ctx.inner_shards
+        po_cross = ctx.num_shards - pi
+        bp = self._padded_block(ctx)
+        per_peer = bp + (bp // compression.BLOCK) * 4      # int8 + scales
+        inner = 2 * pi * ctx.capacity * 4 + pi * per_peer
+        outer = 2 * po_cross * ctx.capacity * 4 + po_cross * per_peer
+        return WireBytes(inner=inner, outer=outer)
 
 
 _REGISTRY: Dict[str, DistributionStrategy] = {}
@@ -209,3 +466,5 @@ def list_strategies() -> List[str]:
 register_strategy("a2a", AllToAllStrategy())
 register_strategy("allgather", AllGatherStrategy())
 register_strategy("psum_scatter", PsumScatterStrategy())
+register_strategy("hier_a2a", HierarchicalA2AStrategy())
+register_strategy("compressed_reduce", CompressedReduceStrategy())

@@ -191,7 +191,8 @@ class DPMRConfig:
     iterations: int = 4
     distribution: str = "a2a"        # any name in the repro.api strategy
     #                                  registry (a2a | allgather |
-    #                                  psum_scatter | user-registered)
+    #                                  psum_scatter | hier_a2a |
+    #                                  compressed_reduce | user-registered)
     grad_scale: str = "mean"         # mean | sum (paper: sum, full-batch GD)
     optimizer: str = "sgd"           # any name in optim.SPARSE_OPTIMIZERS
     #                                  (sgd = the paper's GD; adagrad /

@@ -21,10 +21,16 @@ exactly the paper's HDFS co-location):
 
 The distributeParameters / gradient-reduce collectives are pluggable
 `DistributionStrategy` objects looked up by name from `repro.api.strategies`
-(cfg.distribution: "a2a" | "allgather" | "psum_scatter" | anything third
-parties register). The optimizer applied in updateParameters and the
-learning-rate schedule come from the shared `repro.optim` registries, so the
-sparse face selects them exactly like the dense trainer does.
+(cfg.distribution: "a2a" | "allgather" | "psum_scatter" | "hier_a2a" |
+"compressed_reduce" | anything third parties register). Strategies see the
+mesh's wire tiers — `launch.mesh.tier_axes` factors the axes into the
+DCN-crossing outer tier (`pod`) and the ICI inner tier, carried on the
+`StrategyContext` — and may keep persistent per-device state (`init_carry`,
+e.g. compression error feedback) which lives in `DPMRState.strat`, is
+updated by `train_step`, and is checkpointed with the rest of the state.
+The optimizer applied in updateParameters and the learning-rate schedule
+come from the shared `repro.optim` registries, so the sparse face selects
+them exactly like the dense trainer does.
 """
 from __future__ import annotations
 
@@ -49,6 +55,9 @@ class DPMRState(NamedTuple):
     cold_acc: jax.Array   # (F,) adagrad accumulator, sharded like cold
     hot_acc: jax.Array    # (max_hot,) adagrad accumulator, replicated
     step: jax.Array       # () int32
+    strat: jax.Array      # (P*L,) f32 per-device strategy carry (L from
+    #                       strategy.init_carry; (P,) zeros when stateless),
+    #                       sharded over all mesh axes like cold
 
 
 def _axes(mesh) -> Tuple[str, ...]:
@@ -81,6 +90,35 @@ def capacity(cfg: DPMRConfig, batch_local: int, mesh,
     return capacity_for_shards(cfg, batch_local, num_shards(mesh), factor)
 
 
+def make_strategy_context(cfg: DPMRConfig, mesh, cap: int = 0):
+    """The `StrategyContext` for this (cfg, mesh) geometry: all mesh axes,
+    factored into the (outer=DCN, inner=ICI) wire tiers by
+    `launch.mesh.tier_axes`. `cap` is the per-(src,dst) a2a capacity
+    (batch-size dependent; 0 where only the static geometry matters)."""
+    # late import: repro.api.strategies imports from repro.core
+    from repro.api.strategies import StrategyContext
+    from repro.launch.mesh import tier_axes, tier_shards
+
+    outer, inner = tier_axes(mesh)
+    po, _ = tier_shards(mesh)
+    p = num_shards(mesh)
+    return StrategyContext(axes=_axes(mesh), num_shards=p,
+                           block_size=padded_features(cfg, mesh) // p,
+                           capacity=cap, inner_axes=inner, outer_axes=outer,
+                           outer_shards=po)
+
+
+def strategy_carry_len(cfg: DPMRConfig, mesh) -> int:
+    """Per-device length L of cfg.distribution's persistent carry (1 when
+    the strategy is stateless; the placeholder keeps the state pytree
+    shape-stable across strategies at negligible cost)."""
+    from repro.api.strategies import get_strategy
+
+    carry = get_strategy(cfg.distribution).init_carry(
+        make_strategy_context(cfg, mesh))
+    return 1 if carry is None else int(carry.shape[0])
+
+
 def init_state(cfg: DPMRConfig, mesh, hot_ids=None) -> DPMRState:
     f = padded_features(cfg, mesh)
     axes = _axes(mesh)
@@ -93,8 +131,11 @@ def init_state(cfg: DPMRConfig, mesh, hot_ids=None) -> DPMRState:
     if hot_ids is None:
         hot_ids = jnp.full((cfg.max_hot,), hot_sharding.INT_MAX, jnp.int32)
     hot_ids = jax.device_put(hot_ids.astype(jnp.int32), rep)
+    strat = jax.device_put(
+        jnp.zeros((num_shards(mesh) * strategy_carry_len(cfg, mesh),),
+                  jnp.float32), shard)
     return DPMRState(cold, hot, hot_ids, cold_acc, hot_acc,
-                     jnp.zeros((), jnp.int32))
+                     jnp.zeros((), jnp.int32), strat)
 
 
 def optimize(cfg: DPMRConfig, theta, acc, grad, lr):
@@ -135,17 +176,26 @@ def _device_fwd(cfg, strategy, ctx, kernel_impl,
 
 
 def _device_grads(cfg, strategy, ctx, kernel_impl,
-                  cold_loc, grads_slot, fwd, aux):
-    """Reduce stages: per-feature sums delivered to owners + hot psum."""
+                  cold_loc, grads_slot, fwd, aux, strat_loc, stateful):
+    """Reduce stages: per-feature sums delivered to owners + hot psum.
+
+    `strat_loc` is this device's slice of the persistent strategy carry;
+    stateful strategies receive it as `fwd["carry"]` and return the
+    updated value alongside the gradient."""
     gflat = grads_slot.reshape(-1)
-    grad_cold = strategy.reduce(ctx, cold_loc, gflat, fwd)
+    if stateful:
+        grad_cold, strat_new = strategy.reduce(
+            ctx, cold_loc, gflat, {**fwd, "carry": strat_loc})
+    else:
+        grad_cold = strategy.reduce(ctx, cold_loc, gflat, fwd)
+        strat_new = strat_loc
 
     hot_n = jnp.zeros((cfg.max_hot,), jnp.float32)
     ghot = hot_n.at[jnp.where(aux["is_hot"], aux["hot_slot"],
                               cfg.max_hot)].add(
         jnp.where(aux["is_hot"], gflat, 0.0), mode="drop")
     grad_hot = jax.lax.psum(ghot, ctx.axes)
-    return grad_cold, grad_hot
+    return grad_cold, grad_hot, strat_new
 
 
 def _metrics(axes, probs, labels, nll, overflow):
@@ -170,6 +220,10 @@ class StepFns(NamedTuple):
 
     Access is attribute-only (`fns.train_step`); the one-release
     deprecated dict-style `fns["train_step"]` has been removed.
+
+    `ctx` is the `StrategyContext` the steps were compiled against —
+    feed it to `strategy.bytes_per_device` for the two-tier wire model
+    of this exact geometry.
     """
 
     train_step: Callable     # (state, batch) -> (state, metrics)
@@ -180,6 +234,7 @@ class StepFns(NamedTuple):
     block_size: int          # feature-table rows per device
     num_shards: int          # P
     strategy: str = "a2a"    # registered distribution-strategy name
+    ctx: object = None       # StrategyContext of this compilation
 
 
 def make_step_fns(cfg: DPMRConfig, mesh, batch_size: int,
@@ -189,7 +244,7 @@ def make_step_fns(cfg: DPMRConfig, mesh, batch_size: int,
     for a GLOBAL batch of `batch_size` samples (sharded over all mesh
     axes)."""
     # late import: repro.api.engine imports this module
-    from repro.api.strategies import StrategyContext, get_strategy
+    from repro.api.strategies import get_strategy
 
     axes = _axes(mesh)
     p = num_shards(mesh)
@@ -198,11 +253,11 @@ def make_step_fns(cfg: DPMRConfig, mesh, batch_size: int,
     assert batch_size % p == 0, (batch_size, p)
     cap = capacity(cfg, batch_size // p, mesh, cap_factor)
     strategy = get_strategy(cfg.distribution)
-    ctx = StrategyContext(axes=axes, num_shards=p, block_size=block,
-                          capacity=cap)
+    ctx = make_strategy_context(cfg, mesh, cap)
+    stateful = strategy.init_carry(ctx) is not None
     sched = make_schedule(cfg)
 
-    def _fwd_grads(cold_loc, hot, hot_ids, ids, vals, labels):
+    def _fwd_grads(cold_loc, hot, hot_ids, strat_loc, ids, vals, labels):
         theta, fwd, aux = _device_fwd(
             cfg, strategy, ctx, kernel_impl,
             cold_loc, hot, hot_ids, ids, vals)
@@ -210,23 +265,30 @@ def make_step_fns(cfg: DPMRConfig, mesh, batch_size: int,
             vals, theta, labels, impl=kernel_impl)
         if cfg.grad_scale == "mean":
             grads_slot = grads_slot / float(batch_size)
-        grad_cold, grad_hot = _device_grads(
+        grad_cold, grad_hot, strat_new = _device_grads(
             cfg, strategy, ctx, kernel_impl,
-            cold_loc, grads_slot, fwd, aux)
-        return grad_cold, grad_hot, _metrics(axes, probs, labels, nll,
-                                             aux["overflow"])
+            cold_loc, grads_slot, fwd, aux, strat_loc, stateful)
+        return grad_cold, grad_hot, strat_new, _metrics(
+            axes, probs, labels, nll, aux["overflow"])
 
     def train_dev(cold_loc, hot, hot_ids, cold_acc, hot_acc, step,
-                  ids, vals, labels):
-        grad_cold, grad_hot, m = _fwd_grads(cold_loc, hot, hot_ids,
-                                            ids, vals, labels)
+                  strat_loc, ids, vals, labels):
+        grad_cold, grad_hot, strat_new, m = _fwd_grads(
+            cold_loc, hot, hot_ids, strat_loc, ids, vals, labels)
         lr = sched(step)
         cold_new, cold_acc = optimize(cfg, cold_loc, cold_acc, grad_cold, lr)
         hot_new, hot_acc = optimize(cfg, hot, hot_acc, grad_hot, lr)
-        return cold_new, hot_new, hot_ids, cold_acc, hot_acc, step + 1, m
+        return (cold_new, hot_new, hot_ids, cold_acc, hot_acc, step + 1,
+                strat_new, m)
 
-    def grad_dev(cold_loc, hot, hot_ids, ids, vals, labels):
-        return _fwd_grads(cold_loc, hot, hot_ids, ids, vals, labels)
+    def grad_dev(cold_loc, hot, hot_ids, strat_loc, ids, vals, labels):
+        # the carry is read-only here: full-batch fit() accumulates raw
+        # gradients across many grad_steps before one update, so per-batch
+        # carry mutation would double-count; error feedback advances
+        # through train_step (the SGD path) only
+        grad_cold, grad_hot, _, m = _fwd_grads(
+            cold_loc, hot, hot_ids, strat_loc, ids, vals, labels)
+        return grad_cold, grad_hot, m
 
     def predict_dev(cold_loc, hot, hot_ids, ids, vals):
         theta, _, _ = _device_fwd(cfg, strategy, ctx, kernel_impl,
@@ -239,11 +301,11 @@ def make_step_fns(cfg: DPMRConfig, mesh, batch_size: int,
     smap = functools.partial(compat.shard_map, mesh=mesh, check_vma=False)
 
     train_m = smap(train_dev,
-                   in_specs=(shard, rep, rep, shard, rep, rep,
+                   in_specs=(shard, rep, rep, shard, rep, rep, shard,
                              shard, shard, shard),
-                   out_specs=(shard, rep, rep, shard, rep, rep, rep))
+                   out_specs=(shard, rep, rep, shard, rep, rep, shard, rep))
     grad_m = smap(grad_dev,
-                  in_specs=(shard, rep, rep, shard, shard, shard),
+                  in_specs=(shard, rep, rep, shard, shard, shard, shard),
                   out_specs=(shard, rep, rep))
     pred_m = smap(predict_dev,
                   in_specs=(shard, rep, rep, shard, shard),
@@ -251,15 +313,16 @@ def make_step_fns(cfg: DPMRConfig, mesh, batch_size: int,
 
     @jax.jit
     def train_step(state: DPMRState, batch):
-        cold, hot, hot_ids, cold_acc, hot_acc, step, m = train_m(
+        cold, hot, hot_ids, cold_acc, hot_acc, step, strat, m = train_m(
             state.cold, state.hot, state.hot_ids, state.cold_acc,
-            state.hot_acc, state.step,
+            state.hot_acc, state.step, state.strat,
             batch["ids"], batch["vals"], batch["labels"])
-        return DPMRState(cold, hot, hot_ids, cold_acc, hot_acc, step), m
+        return DPMRState(cold, hot, hot_ids, cold_acc, hot_acc, step,
+                         strat), m
 
     @jax.jit
     def grad_step(state: DPMRState, batch):
-        return grad_m(state.cold, state.hot, state.hot_ids,
+        return grad_m(state.cold, state.hot, state.hot_ids, state.strat,
                       batch["ids"], batch["vals"], batch["labels"])
 
     @jax.jit
@@ -268,7 +331,7 @@ def make_step_fns(cfg: DPMRConfig, mesh, batch_size: int,
                                   grad_cold, lr)
         hot, hot_acc = optimize(cfg, state.hot, state.hot_acc, grad_hot, lr)
         return DPMRState(cold, hot, state.hot_ids, cold_acc, hot_acc,
-                         state.step + 1)
+                         state.step + 1, state.strat)
 
     @jax.jit
     def predict(state: DPMRState, batch):
@@ -278,4 +341,4 @@ def make_step_fns(cfg: DPMRConfig, mesh, batch_size: int,
     return StepFns(train_step=train_step, grad_step=grad_step,
                    apply_update=apply_update, predict=predict,
                    capacity=cap, block_size=block, num_shards=p,
-                   strategy=cfg.distribution)
+                   strategy=cfg.distribution, ctx=ctx)

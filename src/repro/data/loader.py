@@ -24,12 +24,20 @@ One loader owns everything between a `DataSource` and the training step:
                     double-buffering, so host batch synthesis and H2D copy
                     overlap compute instead of serializing with it.
   cursor            an explicit (epoch, step) position. Batch content is a
-                    pure function of `step` (epochs re-read the same shard,
-                    the paper's full-batch regime), so `seek(cursor)` after
-                    a restore reproduces the continued stream bit-for-bit.
-                    The cursor only advances when a batch is HANDED to the
-                    consumer — the prefetch thread running ahead never
-                    moves it, so a checkpoint taken mid-stream is exact.
+                    pure function of `(epoch, step)` — of `step` alone with
+                    shuffling off (epochs re-read the same shard in the same
+                    order, the paper's full-batch regime) — so `seek(cursor)`
+                    after a restore reproduces the continued stream
+                    bit-for-bit. The cursor only advances when a batch is
+                    HANDED to the consumer — the prefetch thread running
+                    ahead never moves it, so a checkpoint taken mid-stream
+                    is exact.
+  shuffling         `shuffle=True` visits each epoch's batches in a fresh
+                    pseudorandom order: a global permutation seeded by
+                    `(shuffle_seed, epoch)` is striped over hosts, so every
+                    epoch covers the same batch set, hosts stay disjoint,
+                    and resume-exactness is preserved (the permutation is
+                    recomputed from the cursor's epoch, never stored).
 
     loader = ShardedLoader(get_source("zipf_sparse", batch_size=512,
                                       num_batches=8), mesh)
@@ -111,6 +119,12 @@ class ShardedLoader:
     epoch_size:    batches per epoch for UNBOUNDED sources (required by
                    `epoch()`; bounded sources define it themselves)
     cursor:        starting position (default (0, 0))
+    shuffle:       per-epoch shuffling — each epoch reads the same batch set
+                   in a fresh order given by a permutation seeded with
+                   `(shuffle_seed, epoch)`. Requires a bounded epoch (a
+                   bounded source or `epoch_size`). Resume stays exact:
+                   the permutation is a pure function of the cursor's epoch
+    shuffle_seed:  base seed of the per-epoch permutations
     """
 
     def __init__(self, source: DataSource, mesh=None, *,
@@ -121,7 +135,9 @@ class ShardedLoader:
                  remainder: str = "drop",
                  prefetch: int = 2,
                  epoch_size: Optional[int] = None,
-                 cursor: Optional[Cursor] = None):
+                 cursor: Optional[Cursor] = None,
+                 shuffle: bool = False,
+                 shuffle_seed: int = 0):
         self.source = source
         # duck-typed sources only promise batch/batch_size/num_batches
         self.source_name = getattr(source, "name", type(source).__name__)
@@ -154,6 +170,14 @@ class ShardedLoader:
             raise ValueError(
                 f"source has {n} batches for {self.num_hosts} hosts: "
                 "fewer than one batch per host per epoch")
+        self.shuffle = bool(shuffle)
+        self.shuffle_seed = int(shuffle_seed)
+        if self.shuffle and n is None:
+            raise ValueError(
+                "shuffle=True needs a bounded epoch to permute: give the "
+                "source a num_batches or pass epoch_size=")
+        self._epoch_batches = None if n is None else int(n)
+        self._perm_cache = (None, None)   # (epoch, permutation)
         self._cursor = cursor if cursor is not None else Cursor()
         self._seek_token = 0   # bumped by seek(); invalidates live iterators
 
@@ -179,7 +203,9 @@ class ShardedLoader:
         return {"cursor": self._cursor.to_dict(),
                 "source": self.source_name,
                 "batch_size": int(getattr(self.source, "batch_size", 0)),
-                "num_hosts": self.num_hosts}
+                "num_hosts": self.num_hosts,
+                "shuffle": self.shuffle,
+                "shuffle_seed": self.shuffle_seed}
 
     def load_state_dict(self, state: Dict) -> None:
         """Restore a `state_dict()` position, validating that the stream it
@@ -197,6 +223,21 @@ class ShardedLoader:
                 f"restoring a cursor recorded against source "
                 f"{saved_source!r} into a {self.source_name!r} loader; "
                 "resume is only exact if both serve identical batches",
+                RuntimeWarning, stacklevel=2)
+        saved_shuffle = state.get("shuffle")
+        if saved_shuffle is not None and bool(saved_shuffle) != self.shuffle:
+            warnings.warn(
+                f"cursor was recorded with shuffle={saved_shuffle} but this "
+                f"loader has shuffle={self.shuffle}; the step index "
+                "addresses a differently-ordered stream — resume is not "
+                "exact", RuntimeWarning, stacklevel=2)
+        saved_sseed = state.get("shuffle_seed")
+        if (self.shuffle and saved_sseed is not None
+                and int(saved_sseed) != self.shuffle_seed):
+            warnings.warn(
+                f"cursor was recorded with shuffle_seed={saved_sseed} but "
+                f"this loader uses shuffle_seed={self.shuffle_seed}; the "
+                "epoch permutations differ — resume is not exact",
                 RuntimeWarning, stacklevel=2)
         saved_bs = state.get("batch_size")
         here_bs = int(getattr(self.source, "batch_size", 0))
@@ -286,10 +327,25 @@ class ShardedLoader:
             cur = nxt
             produced += 1
 
+    def _permutation(self, epoch: int) -> np.ndarray:
+        """The epoch's global batch permutation — a pure function of
+        (shuffle_seed, epoch), so seeking reconstructs it exactly."""
+        cached_epoch, perm = self._perm_cache
+        if cached_epoch != epoch:
+            rng = np.random.default_rng(
+                np.random.SeedSequence([self.shuffle_seed, epoch]))
+            perm = rng.permutation(self._epoch_batches)
+            self._perm_cache = (epoch, perm)
+        return perm
+
     def _load(self, pos: Cursor) -> Dict[str, np.ndarray]:
-        # content depends only on `step`: every epoch re-reads the same
-        # shard in the same order (deterministic full-batch regime)
+        # content is a pure function of the cursor: without shuffling it
+        # depends only on `step` (every epoch re-reads the same shard in
+        # the same order, the deterministic full-batch regime); with
+        # shuffling the epoch's permutation reorders the same batch set
         index = pos.step * self.num_hosts + self.host_index
+        if self.shuffle:
+            index = int(self._permutation(pos.epoch)[index])
         return self._conform(self.source.batch(index))
 
     def _conform(self, batch: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:

@@ -9,8 +9,7 @@ enough structure for loss to move in the integration tests.
 from __future__ import annotations
 
 import dataclasses
-import warnings
-from typing import Dict, Iterator
+from typing import Dict
 
 import numpy as np
 
@@ -49,21 +48,10 @@ class LMDataset:
         return {"tokens": toks[:, :-1].astype(np.int32),
                 "labels": toks[:, 1:].astype(np.int32)}
 
-    def iterate(self, start_step: int = 0) -> Iterator[Dict]:
-        """DEPRECATED: use the data plane instead —
-
-            get_source("lm_markov", vocab_size=V, seq_len=S, batch_size=B)
-
-        fronted by a `repro.data.ShardedLoader` (prefetch + resumable
-        cursor). This shim yields bit-identical batches."""
-        warnings.warn(
-            "LMDataset.iterate is deprecated; use repro.data.get_source"
-            "('lm_markov', ...) with a ShardedLoader", DeprecationWarning,
-            stacklevel=2)
-        step = start_step
-        while True:
-            yield self.batch(step)
-            step += 1
+    # The one-release deprecated `iterate(start_step)` generator has been
+    # REMOVED — use get_source("lm_markov", vocab_size=V, seq_len=S,
+    # batch_size=B) behind a repro.data.ShardedLoader and seek its cursor
+    # (bit-identical batches; migration note in CHANGES.md).
 
 
 def encdec_batch(ds: LMDataset, step: int, d_model: int) -> Dict:

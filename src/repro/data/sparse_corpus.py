@@ -9,8 +9,7 @@ b tuned to the target positive rate.
 from __future__ import annotations
 
 import dataclasses
-import warnings
-from typing import Iterator, Tuple
+from typing import Tuple
 
 import numpy as np
 
@@ -87,19 +86,7 @@ def make_batch(spec: CorpusSpec, batch_size: int, seed: int):
     labels = (rng.random(batch_size) < p).astype(np.int32)
     return {"ids": ids, "vals": vals, "labels": labels}
 
-
-def batches(spec: CorpusSpec, batch_size: int, num_batches: int,
-            start: int = 0) -> Iterator[dict]:
-    """DEPRECATED: use the data plane instead —
-
-        get_source("zipf_sparse", spec=spec, batch_size=B, num_batches=n,
-                   start=k)
-
-    fronted by a `repro.data.ShardedLoader` (prefetch + resumable cursor).
-    This shim yields bit-identical batches (same per-index seeding)."""
-    warnings.warn(
-        "sparse_corpus.batches is deprecated; use repro.data.get_source"
-        "('zipf_sparse', ...) with a ShardedLoader", DeprecationWarning,
-        stacklevel=2)
-    for i in range(start, num_batches):
-        yield make_batch(spec, batch_size, seed=batch_seed(spec, i))
+# The one-release deprecated `batches(spec, bs, n, start)` generator has
+# been REMOVED — use get_source("zipf_sparse", spec=spec, batch_size=B,
+# num_batches=n, start=k) behind a repro.data.ShardedLoader (bit-identical
+# batches; migration note in CHANGES.md).

@@ -74,6 +74,46 @@ def _collectives_from_hlo(hlo: str):
     return out
 
 
+def run_strategy_wire(global_batch: int = 1 << 24, k: int = 64,
+                      feature_space: int = 1 << 30) -> list:
+    """Two-tier wire report for every registered distribution strategy on
+    the production mesh geometries (analytic — no compilation).
+
+    Per (mesh, strategy): bytes/device/step on the fast tier (ICI, inner
+    axes) and across DCN (the `pod` outer axis), from each strategy's own
+    `bytes_per_device` model at the paper's full-batch regime. The multi
+    rows are where `hier_a2a` earns its keep: its DCN bytes are the table
+    block, not the shuffled request volume.
+    """
+    from repro.api.strategies import StrategyContext, get_strategy, \
+        list_strategies
+    from repro.configs.base import DPMRConfig
+    from repro.core import dpmr
+
+    cfg = DPMRConfig(num_features=feature_space, max_features_per_sample=k)
+    rows = []
+    # geometry of make_production_mesh: single (16,16); multi (2,16,16)
+    for mesh_kind, p, po in (("single", 256, 1), ("multi", 512, 2)):
+        cap = dpmr.capacity_for_shards(cfg, global_batch // p, p)
+        ctx = StrategyContext(axes=(), num_shards=p,
+                              block_size=-(-feature_space // p),
+                              capacity=cap, outer_shards=po)
+        for name in list_strategies():
+            wb = get_strategy(name).bytes_per_device(ctx)
+            rows.append({"mesh": mesh_kind, "strategy": name,
+                         "shards": p, "pods": po, "capacity": cap,
+                         "inner_bytes": int(wb.inner),
+                         "outer_bytes": int(wb.outer),
+                         "total_bytes": int(wb.total)})
+    print(f"{'mesh':>7s} {'strategy':>18s} {'ICI B/dev':>12s} "
+          f"{'DCN B/dev':>12s} {'total':>12s}")
+    for r in rows:
+        print(f"{r['mesh']:>7s} {r['strategy']:>18s} "
+              f"{r['inner_bytes']:>12.3e} {r['outer_bytes']:>12.3e} "
+              f"{r['total_bytes']:>12.3e}")
+    return rows
+
+
 def _probe_config(cfg, n: int):
     """Reduced-DEPTH same-width config with n 'units' + the real unit count.
 
@@ -377,6 +417,10 @@ def all_cells():
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--cell", help="arch:shape:mesh  (runs in-process)")
+    ap.add_argument("--strategies", action="store_true",
+                    help="print the two-tier (ICI/DCN) wire model of every "
+                         "registered distribution strategy on the "
+                         "production mesh geometries")
     ap.add_argument("--probe", action="store_true",
                     help="run the 1/2-unit unrolled cost probes instead")
     ap.add_argument("--pconf", default="",
@@ -392,6 +436,15 @@ def main():
                     help="recompute cells that already have results")
     ap.add_argument("--no-hlo", action="store_true")
     args = ap.parse_args()
+
+    if args.strategies:
+        rows = run_strategy_wire()
+        if args.out:
+            os.makedirs(args.out, exist_ok=True)
+            with open(os.path.join(args.out, "strategy_wire.json"),
+                      "w") as f:
+                json.dump(rows, f, indent=1)
+        return
 
     if args.cell:
         parts = args.cell.split(":")

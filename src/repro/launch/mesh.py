@@ -30,6 +30,41 @@ def make_host_mesh(data: int = 1, model: int = 1):
     return compat.make_mesh((data, model), ("data", "model"))
 
 
+OUTER_AXES = ("pod",)   # mesh axes that cross DCN (inter-pod network)
+
+
+def tier_axes(mesh) -> tuple:
+    """Factor `mesh.axis_names` into the (outer, inner) wire tiers.
+
+    Outer axes cross the slow inter-pod network (DCN); inner axes are the
+    fast intra-pod interconnect (ICI). Hierarchical strategies rely on the
+    linear device index over all axes decomposing as
+    `outer_index * inner_shards + inner_index`, which holds iff the outer
+    axes are a LEADING prefix of the mesh — enforced here.
+    """
+    names = tuple(mesh.axis_names)
+    outer = tuple(a for a in names if a in OUTER_AXES)
+    inner = tuple(a for a in names if a not in OUTER_AXES)
+    if outer and names[:len(outer)] != outer:
+        raise ValueError(
+            f"outer (DCN) axes {outer} must lead the mesh, got {names}; "
+            "construct meshes (pod, ...) first, as make_production_mesh "
+            "does")
+    return outer, inner
+
+
+def tier_shards(mesh) -> tuple:
+    """(outer_shards, inner_shards) device counts for the two tiers."""
+    outer, inner = tier_axes(mesh)
+    po = 1
+    for a in outer:
+        po *= int(mesh.shape[a])
+    pi = 1
+    for a in inner:
+        pi *= int(mesh.shape[a])
+    return po, pi
+
+
 def batch_axes(mesh) -> tuple:
     """Mesh axes the global batch is sharded over (DP axes present in mesh)."""
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -5,10 +5,18 @@ plane (lm_markov source + prefetching ShardedLoader with a resumable
 cursor), checkpoint manager (atomic/keep-N/async), preemption guard,
 straggler watchdog, and resume (model + optimizer + exact data position).
 
+`--sparse` drives the paper's sparse face instead (DPMREngine over a
+zipf_sparse loader); `--strategy` selects any registered distribution
+strategy (a2a | allgather | psum_scatter | hier_a2a | compressed_reduce |
+user-registered) and engine save()/restore() carries the model, the
+strategy carry (e.g. compression error feedback), and the data cursor.
+
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch granite-8b --smoke \
       --steps 50 --batch 8 --seq 64 --ckpt /tmp/ck
-  # kill it mid-run; rerun the same command: it resumes from the checkpoint
+  PYTHONPATH=src python -m repro.launch.train --sparse \
+      --strategy compressed_reduce --steps 40 --batch 512 --ckpt /tmp/ck
+  # kill either mid-run; rerun the same command: it resumes from the ckpt
 """
 from __future__ import annotations
 
@@ -44,6 +52,48 @@ def make_loader(args, cfg, mesh=None) -> ShardedLoader:
     return ShardedLoader(source, mesh, placement="device",
                          host_index=0, num_hosts=1,
                          prefetch=args.prefetch)
+
+
+def sparse_loop(args) -> dict:
+    """Sparse-face driver: DPMREngine + zipf_sparse loader, strategy by
+    name (--strategy), resumable via engine save()/restore() (state incl.
+    the strategy carry + the loader cursor)."""
+    from repro.api import DPMREngine, ShardedLoader, get_source, get_strategy
+    from repro.ckpt.checkpointer import Checkpointer as Ck
+    from repro.configs.base import DPMRConfig
+
+    get_strategy(args.strategy)          # fail fast on unknown names
+    mesh = make_host_mesh(args.mesh_data, args.mesh_model)
+    cfg = DPMRConfig(num_features=args.features,
+                     max_features_per_sample=32,
+                     distribution=args.strategy, optimizer="adagrad",
+                     learning_rate=args.lr)
+    loader = ShardedLoader(
+        get_source("zipf_sparse", batch_size=args.batch,
+                   num_batches=args.sparse_batches,
+                   num_features=args.features, features_per_sample=32,
+                   seed=args.data_seed),
+        mesh, host_index=0, num_hosts=1, prefetch=args.prefetch,
+        shuffle=args.shuffle)
+    engine = DPMREngine(cfg, mesh)
+    if args.ckpt and Ck(args.ckpt).latest_step() is not None:
+        engine.restore(args.ckpt, loader=loader)
+        log.info("resumed sparse run at step %d (strategy %s)",
+                 int(engine.state.step), args.strategy)
+    # checkpoint every --save-every steps (like the dense loop), so a
+    # killed run resumes mid-stream instead of restarting from step 0
+    history = []
+    while int(engine.state.step) < args.steps:
+        chunk = min(args.save_every, args.steps - int(engine.state.step))
+        history += engine.fit_sgd(loader, steps=chunk)
+        if args.ckpt:
+            engine.save(args.ckpt, keep=args.keep)
+    fns = engine.step_fns(args.batch)    # cached if fit already compiled it
+    wire = get_strategy(args.strategy).bytes_per_device(fns.ctx)
+    return {"history": history, "last_step": int(engine.state.step),
+            "strategy": args.strategy,
+            "wire_bytes": {"inner": wire.inner, "outer": wire.outer},
+            "losses": [h["loss"] for h in history]}
 
 
 def train_loop(args, fail_injector=None) -> dict:
@@ -110,7 +160,20 @@ def train_loop(args, fail_injector=None) -> dict:
 
 def build_parser():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", help="model zoo id (dense face; required "
+                                   "unless --sparse)")
+    ap.add_argument("--sparse", action="store_true",
+                    help="train the DPMR sparse face (DPMREngine over a "
+                         "zipf_sparse loader) instead of a zoo model")
+    ap.add_argument("--strategy", default="a2a",
+                    help="sparse-face distribution strategy (any name in "
+                         "repro.api.list_strategies())")
+    ap.add_argument("--features", type=int, default=1 << 14,
+                    help="sparse-face hashed feature-space size")
+    ap.add_argument("--sparse-batches", type=int, default=64,
+                    help="sparse-face corpus size in batches (one epoch)")
+    ap.add_argument("--shuffle", action="store_true",
+                    help="per-epoch loader shuffling (seeded, resume-exact)")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced same-family config (CPU-scale)")
     ap.add_argument("--steps", type=int, default=100)
@@ -140,6 +203,16 @@ def build_parser():
 def main():
     logging.basicConfig(level=logging.INFO)
     args = build_parser().parse_args()
+    if args.sparse:
+        out = sparse_loop(args)
+        wb = out["wire_bytes"]
+        print(f"[{out['strategy']}] final loss "
+              f"{out['losses'][-1] if out['losses'] else float('nan'):.4f} "
+              f"after {out['last_step']} steps; wire bytes/device/step "
+              f"inner={wb['inner']} outer={wb['outer']}")
+        return
+    if not args.arch:
+        raise SystemExit("--arch is required (or pass --sparse)")
     out = train_loop(args)
     print(f"final loss {out['losses'][-1]:.4f} after {out['last_step']} steps")
 

@@ -8,10 +8,14 @@ Adam / EF-SGD lineage). We implement int8 block-quantized all-reduce:
     g_hat = psum(q * scale) / n_pods
     e'    = (g - e) - dequant(q)          (error feedback, carried)
 
-Used by the trainer via shard_map over ONLY the `pod` axis (`axis_names=
-{'pod'}`), leaving data/model sharding to GSPMD inside. Wire-bytes drop 4x
-(f32->int8); error feedback keeps SGD/Adam convergence (validated in
-tests/test_compression.py against uncompressed training).
+Used by the dense trainer via shard_map over ONLY the `pod` axis
+(`axis_names={'pod'}`), leaving data/model sharding to GSPMD inside, and by
+the sparse face's `compressed_reduce` distribution strategy
+(repro/api/strategies.py), which quantizes the dense gradient reduce with
+the same `quantize`/`dequantize` primitives and carries its error feedback
+in `DPMRState.strat`. Wire-bytes drop 4x (f32->int8); error feedback keeps
+SGD/Adam convergence (validated against uncompressed training in
+tests/test_multidevice.py and benchmarks/strategy_hierarchy.py).
 """
 from __future__ import annotations
 
@@ -37,6 +41,12 @@ def _quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
 
 def _dequantize(q: jax.Array, scale: jax.Array, n: int) -> jax.Array:
     return (q.astype(jnp.float32) * scale).reshape(-1)[:n]
+
+
+# public names of the block (de)quantizer — the compressed_reduce strategy
+# builds its wire format out of exactly these primitives
+quantize = _quantize
+dequantize = _dequantize
 
 
 def compress_psum(g: jax.Array, err: jax.Array, axis: str

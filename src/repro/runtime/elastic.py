@@ -41,6 +41,13 @@ def reshard_dpmr_state(state: dpmr.DPMRState, cfg: DPMRConfig, new_mesh
             x = x[:f_new]
         return x
 
+    # the strategy carry (e.g. compression error feedback) is per-DEVICE
+    # state, meaningless under a different shard count — reset to zeros of
+    # the new mesh's geometry (safe: it is an optimization residual, not
+    # model state; the next steps rebuild it)
+    p_new = dpmr.num_shards(new_mesh)
+    strat = jnp.zeros((p_new * dpmr.strategy_carry_len(cfg, new_mesh),),
+                      jnp.float32)
     return dpmr.DPMRState(
         cold=jax.device_put(repad(state.cold), shard),
         hot=jax.device_put(jax.device_get(state.hot), rep),
@@ -48,4 +55,5 @@ def reshard_dpmr_state(state: dpmr.DPMRState, cfg: DPMRConfig, new_mesh
         cold_acc=jax.device_put(repad(state.cold_acc), shard),
         hot_acc=jax.device_put(jax.device_get(state.hot_acc), rep),
         step=jax.device_put(jax.device_get(state.step), rep),
+        strat=jax.device_put(strat, shard),
     )

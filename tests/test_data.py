@@ -1,8 +1,6 @@
 """Data-plane tests: source registry, built-in source equivalence, file
 corpus roundtrip, ShardedLoader (conformance, host sharding, prefetch,
 cursors), and resume-exactness through engine save/restore."""
-import warnings
-
 import numpy as np
 import pytest
 
@@ -65,26 +63,30 @@ def test_source_registry():
 
 
 # ---------------------------------------------------------------------------
-# built-in sources == the legacy generators, bit for bit
+# built-in sources honour the documented seeding contract; the one-release
+# deprecation shims over the loose generators are GONE
 # ---------------------------------------------------------------------------
 
 
-def test_zipf_source_matches_legacy_batches():
+def test_zipf_source_seeding_contract():
+    """`zipf_sparse.batch(i)` == `make_batch(spec, bs, batch_seed(spec,
+    start + i))` — the per-index seeding rule checkpoint resume-exactness
+    rests on."""
     src = _zipf(num_batches=5)
     spec = src.spec
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        legacy = list(sparse_corpus.batches(spec, 64, 5))
-    for i, want in enumerate(legacy):
-        _assert_batches_equal(src.batch(i), want)
-    # start= carves the same held-out window the old start arg did
+    for i in (0, 2, 4):
+        _assert_batches_equal(
+            src.batch(i),
+            sparse_corpus.make_batch(spec, 64,
+                                     sparse_corpus.batch_seed(spec, i)))
+    # start= carves a held-out window out of the same index space
     tail = get_source("zipf_sparse", spec=spec, batch_size=64,
                       num_batches=2, start=3)
-    _assert_batches_equal(tail.batch(0), legacy[3])
-    _assert_batches_equal(tail.batch(1), legacy[4])
+    _assert_batches_equal(tail.batch(0), src.batch(3))
+    _assert_batches_equal(tail.batch(1), src.batch(4))
 
 
-def test_lm_source_matches_legacy_dataset():
+def test_lm_source_matches_dataset():
     src = get_source("lm_markov", vocab_size=101, seq_len=8, batch_size=4,
                      seed=3)
     ds = LMDataset(LMDataConfig(101, 8, 4, seed=3))
@@ -95,11 +97,12 @@ def test_lm_source_matches_legacy_dataset():
     assert enc.batch(0)["frames"].shape == (4, 8, 16)
 
 
-def test_legacy_generators_warn():
-    with pytest.warns(DeprecationWarning):
-        next(sparse_corpus.batches(_zipf().spec, 8, 1))
-    with pytest.warns(DeprecationWarning):
-        next(LMDataset(LMDataConfig(11, 4, 2)).iterate())
+def test_legacy_generator_shims_removed():
+    """`sparse_corpus.batches` / `LMDataset.iterate` finished their
+    one-release deprecation (migration table in CHANGES.md)."""
+    assert not hasattr(sparse_corpus, "batches")
+    assert not hasattr(LMDataset, "iterate")
+    assert not hasattr(LMDataset(LMDataConfig(11, 4, 2)), "iterate")
 
 
 # ---------------------------------------------------------------------------
@@ -266,6 +269,114 @@ def test_loader_producer_error_propagates():
     loader = ShardedLoader(Broken(), placement="host", prefetch=2)
     with pytest.raises(RuntimeError, match="disk on fire"):
         loader.take(5)
+
+
+# ---------------------------------------------------------------------------
+# per-epoch shuffling
+# ---------------------------------------------------------------------------
+
+
+def _batch_key(batch):
+    """Hashable identity of a batch (its ids bytes) for multiset checks."""
+    return np.asarray(batch["ids"]).tobytes()
+
+
+def test_shuffle_permutes_each_epoch():
+    """Each epoch covers exactly the source's batch set, in an order that
+    differs between epochs and from the unshuffled stream."""
+    mesh = make_host_mesh(1, 1)
+    src = _zipf(num_batches=6)
+    base_keys = [_batch_key(src.batch(i)) for i in range(6)]
+    loader = ShardedLoader(_zipf(num_batches=6), mesh, prefetch=0,
+                           shuffle=True)
+    e0 = [_batch_key(b) for b in loader.take(6)]
+    e1 = [_batch_key(b) for b in loader.take(6)]
+    assert sorted(e0) == sorted(base_keys)      # same multiset...
+    assert sorted(e1) == sorted(base_keys)
+    assert e0 != e1                             # ...fresh order per epoch
+    assert loader.cursor == Cursor(2, 0)
+
+
+def test_shuffle_is_deterministic_and_seeded():
+    mesh = make_host_mesh(1, 1)
+    a = ShardedLoader(_zipf(num_batches=6), mesh, prefetch=0, shuffle=True)
+    b = ShardedLoader(_zipf(num_batches=6), mesh, prefetch=0, shuffle=True)
+    for x, y in zip(a.take(8), b.take(8)):
+        _assert_batches_equal(x, y)
+    fresh = ShardedLoader(_zipf(num_batches=6), mesh, prefetch=0,
+                          shuffle=True)
+    other = ShardedLoader(_zipf(num_batches=6), mesh, prefetch=0,
+                          shuffle=True, shuffle_seed=7)
+    assert [_batch_key(x) for x in other.take(6)] != \
+        [_batch_key(x) for x in fresh.take(6)]
+
+
+def test_shuffle_requires_bounded_epoch():
+    with pytest.raises(ValueError, match="bounded"):
+        ShardedLoader(_zipf(), make_host_mesh(1, 1), shuffle=True)
+    # an explicit epoch_size bounds an unbounded source
+    lm = get_source("lm_markov", vocab_size=11, seq_len=4, batch_size=2)
+    loader = ShardedLoader(lm, placement="host", prefetch=0,
+                           epoch_size=4, shuffle=True)
+    assert len(list(loader.epoch())) == 4
+
+
+def test_shuffle_seek_reproduces_stream():
+    """The permutation is a pure function of (seed, epoch): seeking into
+    the middle of any epoch reproduces the uninterrupted order."""
+    mesh = make_host_mesh(1, 1)
+    full = ShardedLoader(_zipf(num_batches=5), mesh, prefetch=2,
+                         shuffle=True).take(12)
+    jumped = ShardedLoader(_zipf(num_batches=5), mesh, prefetch=2,
+                           shuffle=True)
+    jumped.seek(Cursor(1, 3))
+    for want, got in zip(full[8:], jumped.take(4)):
+        _assert_batches_equal(want, got)
+
+
+def test_shuffle_resume_exactness_zipf(tmp_path):
+    """Engine + shuffled zipf_sparse loader: train, save mid-epoch,
+    restore into fresh objects — the continuation is bit-identical to the
+    uninterrupted run (Cursor.epoch re-seeds the permutation)."""
+    mesh = make_host_mesh(1, 1)
+    cfg = _cfg()
+    ckdir = str(tmp_path / "ck")
+
+    def loader():
+        return ShardedLoader(_zipf(batch_size=128, num_batches=5), mesh,
+                             shuffle=True)
+
+    full = DPMREngine(cfg, mesh)
+    full_hist = full.fit_sgd(loader(), steps=8)     # crosses epoch boundary
+
+    part = DPMREngine(cfg, mesh)
+    part_hist = part.fit_sgd(loader(), steps=4)
+    part.save(ckdir)
+
+    resumed = DPMREngine(cfg, mesh)
+    resumed_loader = loader()
+    manifest = resumed.restore(ckdir, loader=resumed_loader)
+    assert manifest["extra"]["data"]["shuffle"] is True
+    assert resumed_loader.cursor == Cursor(0, 4)
+    resumed_hist = resumed.fit_sgd(resumed_loader, steps=4)
+
+    assert part_hist + resumed_hist == full_hist
+    for a, b in zip(full.state, resumed.state):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_shuffle_mismatch_warns_on_restore():
+    mesh = make_host_mesh(1, 1)
+    saved = ShardedLoader(_zipf(num_batches=6), mesh,
+                          shuffle=True).state_dict()
+    plain = ShardedLoader(_zipf(num_batches=6), mesh)
+    with pytest.warns(RuntimeWarning, match="shuffle"):
+        plain.load_state_dict(saved)
+    # same shuffle flag but a different seed = different permutations
+    other_seed = ShardedLoader(_zipf(num_batches=6), mesh, shuffle=True,
+                               shuffle_seed=7)
+    with pytest.warns(RuntimeWarning, match="shuffle_seed"):
+        other_seed.load_state_dict(saved)
 
 
 # ---------------------------------------------------------------------------

@@ -1,22 +1,28 @@
 """DPMR engine tests: routing oracles, hot sharding, convergence, strategy
-equivalence (a2a == allgather == psum_scatter == dense oracle), the
-DPMREngine facade, capacity/overflow accounting, and checkpoint roundtrip."""
+equivalence (a2a == allgather == psum_scatter == hier_a2a == dense oracle,
+compressed_reduce within quantization error), the two-tier wire model, the
+DPMREngine facade, capacity/overflow accounting, and checkpoint roundtrip
+(including the persistent strategy carry)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.api import (DPMREngine, DistributionStrategy, hot_ids_from_corpus,
-                       get_strategy, list_strategies, register_strategy)
+from repro.api import (DPMREngine, DistributionStrategy, WireBytes,
+                       hot_ids_from_corpus, get_strategy, list_strategies,
+                       register_strategy)
+from repro.api.strategies import StrategyContext
 from repro.configs.base import DPMRConfig
 from repro.core import dpmr, hot_sharding, sparse
 from repro.data import get_source, sparse_corpus
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, tier_axes, tier_shards
 
 F = 1 << 12
 SPEC = sparse_corpus.CorpusSpec(num_features=F, features_per_sample=16,
                                 signal_features=256, seed=0)
-STRATEGIES = ("a2a", "allgather", "psum_scatter")
+# strategies that are EXACT (bit-identical parameters when nothing
+# overflows); compressed_reduce is quantized and tested for parity instead
+STRATEGIES = ("a2a", "allgather", "psum_scatter", "hier_a2a")
 
 
 def _batches(batch_size, num_batches, start=0):
@@ -135,7 +141,8 @@ def test_capacity_model():
     assert c256 < c32
 
 
-@pytest.mark.parametrize("distribution", ["a2a", "psum_scatter"])
+@pytest.mark.parametrize("distribution", ["a2a", "psum_scatter",
+                                          "hier_a2a", "compressed_reduce"])
 def test_overflow_metric_nonzero_at_tiny_capacity(distribution):
     """Sparse-forward strategies report dropped uniques through the
     `overflow` metric when cap_factor is forced tiny, and zero at the
@@ -253,6 +260,132 @@ def test_classify_probabilities_valid():
     probs = eng.predict({"ids": b["ids"], "vals": b["vals"]})
     assert probs.shape == (128,)
     assert np.all((probs >= 0) & (probs <= 1))
+
+
+# ---------------------------------------------------------------------------
+# two-tier wire model + hierarchical / compressed strategies
+# ---------------------------------------------------------------------------
+
+
+def test_bytes_per_device_two_tier_contract():
+    """Every registered built-in returns WireBytes; on a single-tier
+    geometry nothing crosses DCN and the totals match the legacy scalar
+    models; inner + outer == total always."""
+    p, cap, block = 256, 64, 1 << 14
+    flat = StrategyContext(axes=(), num_shards=p, block_size=block,
+                           capacity=cap)
+    legacy = {"a2a": 3 * p * cap * 4,
+              "allgather": 2 * block * (p - 1) * 4,
+              "psum_scatter": 2 * p * cap * 4 + block * (p - 1) * 4}
+    for name in list_strategies():
+        wb = get_strategy(name).bytes_per_device(flat)
+        assert isinstance(wb, WireBytes), name
+        assert wb.outer == 0, (name, wb)
+        assert wb.total == wb.inner + wb.outer
+        if name in legacy:
+            assert wb.total == legacy[name], (name, wb)
+
+
+def test_hier_a2a_crosses_dcn_with_fewer_bytes():
+    """The headline property: on a multi-pod geometry at the paper's
+    full-batch regime, hier_a2a's DCN bytes (table block mirror + per-pod
+    partials) are strictly below flat a2a's (cross-pod request volume)."""
+    p, po = 512, 2
+    cfg = DPMRConfig(num_features=1 << 30, max_features_per_sample=64)
+    cap = dpmr.capacity_for_shards(cfg, (1 << 24) // p, p)
+    ctx = StrategyContext(axes=(), num_shards=p,
+                          block_size=(1 << 30) // p, capacity=cap,
+                          outer_shards=po)
+    a2a = get_strategy("a2a").bytes_per_device(ctx)
+    hier = get_strategy("hier_a2a").bytes_per_device(ctx)
+    assert hier.outer < a2a.outer, (hier, a2a)
+    # the trade: hier pays with MORE inner (ICI) volume, never less
+    assert hier.inner >= a2a.inner
+
+
+def test_strategy_context_exposes_mesh_tiers():
+    """make_step_fns threads the (outer, inner) axis split of the mesh to
+    the strategies via StepFns.ctx; a pod-less mesh has an empty outer
+    tier."""
+    mesh = make_host_mesh(1, 1)
+    assert tier_axes(mesh) == ((), ("data", "model"))
+    assert tier_shards(mesh) == (1, 1)
+    fns = DPMREngine(_cfg(), mesh).step_fns(128)
+    assert fns.ctx.axes == ("data", "model")
+    assert fns.ctx.outer_axes == () and fns.ctx.outer_shards == 1
+    assert fns.ctx.inner_axes == ("data", "model")
+    assert fns.ctx.inner_shards == fns.ctx.num_shards == 1
+
+
+def test_compressed_reduce_convergence_parity():
+    """compressed_reduce (int8 reduce + error feedback) trains to within
+    1% of a2a's final loss on the same SGD run."""
+    mesh = make_host_mesh(1, 1)
+    final = {}
+    for dist in ("a2a", "compressed_reduce"):
+        eng = DPMREngine(_cfg(distribution=dist, optimizer="adagrad",
+                              learning_rate=2.0), mesh)
+        hist = eng.fit_sgd(_batches(256, 40))
+        final[dist] = np.mean([h["loss"] for h in hist[-5:]])
+    rel = abs(final["compressed_reduce"] - final["a2a"]) / final["a2a"]
+    assert rel < 0.01, final
+
+
+def test_compressed_reduce_error_feedback_state():
+    """The quantization residual lives in DPMRState.strat: zero at init,
+    nonzero after a step, untouched by stateless strategies."""
+    mesh = make_host_mesh(1, 1)
+    batch = sparse_corpus.make_batch(SPEC, 128, 0)
+
+    eng = DPMREngine(_cfg(distribution="compressed_reduce"), mesh)
+    f = dpmr.padded_features(eng.cfg, mesh)
+    assert eng.state.strat.shape == (f,)          # per-device (F,) carry
+    assert float(jnp.abs(eng.state.strat).sum()) == 0.0
+    eng.train_step(batch)
+    assert float(jnp.abs(eng.state.strat).sum()) > 0.0
+
+    plain = DPMREngine(_cfg(), mesh)              # stateless: placeholder
+    assert plain.state.strat.shape == (1,)
+    plain.train_step(batch)
+    assert float(jnp.abs(plain.state.strat).sum()) == 0.0
+
+
+def test_compressed_reduce_carry_checkpoint_roundtrip(tmp_path):
+    """save()/restore() persists the error-feedback carry: a restored run
+    continues bit-identically to the uninterrupted one (it would diverge
+    if the carry were dropped)."""
+    mesh = make_host_mesh(1, 1)
+    cfg = _cfg(distribution="compressed_reduce", optimizer="adagrad",
+               learning_rate=2.0)
+    batches = list(_batches(128, 6))
+
+    full = DPMREngine(cfg, mesh)
+    full.fit_sgd(iter(batches))
+
+    part = DPMREngine(cfg, mesh)
+    part.fit_sgd(iter(batches[:3]))
+    assert float(jnp.abs(part.state.strat).sum()) > 0.0
+    part.save(str(tmp_path))
+
+    resumed = DPMREngine(cfg, mesh)
+    resumed.restore(str(tmp_path))
+    np.testing.assert_array_equal(np.asarray(part.state.strat),
+                                  np.asarray(resumed.state.strat))
+    resumed.fit_sgd(iter(batches[3:]))
+    for a, b in zip(full.state, resumed.state):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_warns_on_strategy_mismatch(tmp_path):
+    """A checkpoint trained under one strategy restored into an engine
+    configured for another must not silently adopt the foreign carry."""
+    mesh = make_host_mesh(1, 1)
+    eng = DPMREngine(_cfg(distribution="a2a"), mesh)
+    eng.fit_sgd(_batches(128, 2))
+    eng.save(str(tmp_path))
+    other = DPMREngine(_cfg(distribution="psum_scatter"), mesh)
+    with pytest.warns(RuntimeWarning, match="distribution"):
+        other.restore(str(tmp_path))
 
 
 # ---------------------------------------------------------------------------

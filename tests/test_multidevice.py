@@ -88,6 +88,49 @@ print(json.dumps({"max_diff": diff}))
     assert out["max_diff"] < 1e-6, out
 
 
+def test_hier_and_compressed_strategies_on_pod_mesh():
+    """(2,2,2) (pod,data,model) mesh: hier_a2a's two-level exchange
+    produces the same parameters as flat a2a (float-order tolerance), and
+    compressed_reduce trains with a live error-feedback carry."""
+    out = run_py(COMMON + """
+from repro.api import DPMREngine
+from repro.configs.base import DPMRConfig
+from repro.data import get_source
+
+src = get_source("zipf_sparse", batch_size=256, num_features=1<<12,
+                 features_per_sample=16, signal_features=256, seed=0)
+batches = list(src.iter_batches(limit=3))
+base = dict(num_features=1<<12, max_features_per_sample=16, iterations=2,
+            learning_rate=1.0, max_hot=32)
+mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
+colds = {}
+for dist in ("a2a", "hier_a2a"):
+    eng = DPMREngine(DPMRConfig(distribution=dist, **base), mesh)
+    eng.fit(lambda: iter(batches))
+    assert eng.fns.ctx.outer_axes == ("pod",), eng.fns.ctx
+    colds[dist] = np.asarray(eng.state.cold)
+sgd = {}
+hist = None
+for dist in ("a2a", "compressed_reduce"):
+    eng = DPMREngine(DPMRConfig(distribution=dist, **base), mesh)
+    hist = eng.fit_sgd(iter(batches))
+    sgd[dist] = eng
+print(json.dumps({
+    "max_diff": float(np.max(np.abs(colds["a2a"] - colds["hier_a2a"]))),
+    "comp_final_loss": hist[-1]["loss"],
+    "comp_vs_a2a": float(np.max(np.abs(
+        np.asarray(sgd["compressed_reduce"].state.cold)
+        - np.asarray(sgd["a2a"].state.cold)))),
+    "carry_nonzero": bool(np.abs(np.asarray(
+        sgd["compressed_reduce"].state.strat)).sum() > 0)}))
+""")
+    assert out["max_diff"] < 1e-5, out          # exact up to float order
+    import math
+    assert math.isfinite(out["comp_final_loss"]), out
+    assert out["carry_nonzero"] is True, out
+    assert out["comp_vs_a2a"] < 0.05, out       # quantized but tracking
+
+
 def test_explicit_fsdp_linear_matches_matmul():
     """core.fsdp.dpmr_dense_linear (all_gather/psum_scatter staging) ==
     plain x @ W, forward AND backward."""
