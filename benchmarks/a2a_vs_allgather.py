@@ -26,7 +26,7 @@ artifact.
 """
 from __future__ import annotations
 
-from repro.api import get_strategy, list_strategies
+from repro.api import get_strategy
 from repro.api.strategies import StrategyContext
 from repro.configs.base import DPMRConfig
 from repro.core import dpmr

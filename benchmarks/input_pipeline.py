@@ -71,8 +71,11 @@ def run(steps: int = 40, batch: int = 4096, log2_features: int = 18,
         return get_source("zipf_sparse", batch_size=batch,
                           num_batches=num_batches, **corpus)
 
-    results = {"config": {"steps": steps, "batch": batch,
-                          "num_features": f}, "loader": {}, "fit_sgd": {}}
+    # shared BENCH envelope (scripts/check_bench.py): name/config/results
+    out = {"name": "input_pipeline",
+           "config": {"steps": steps, "batch": batch, "num_features": f},
+           "results": {"loader": {}, "fit_sgd": {}}}
+    results = out["results"]
 
     # -- raw loader throughput: synthetic vs file, prefetch off/on ---------
     tmp = tempfile.mkdtemp(prefix="repro_input_pipeline_")
@@ -105,8 +108,8 @@ def run(steps: int = 40, batch: int = 4096, log2_features: int = 18,
 
     if write_json:
         with open("BENCH_input_pipeline.json", "w") as fh:
-            json.dump(results, fh, indent=2)
-    return results
+            json.dump(out, fh, indent=2)
+    return out
 
 
 def main():
@@ -119,9 +122,9 @@ def main():
     res = run(steps=args.steps, batch=args.batch,
               log2_features=args.log2_features, quick=args.quick)
     print("name,batches_per_s")
-    for k, v in res["loader"].items():
+    for k, v in res["results"]["loader"].items():
         print(f"loader_{k},{v}")
-    fs = res["fit_sgd"]
+    fs = res["results"]["fit_sgd"]
     print(f"fit_sgd_sync,{fs['sync_steps_per_s']}")
     print(f"fit_sgd_prefetch,{fs['prefetch_steps_per_s']}")
     print(f"overlap_speedup,{fs['speedup']}x")

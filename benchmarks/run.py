@@ -89,7 +89,20 @@ def bench_input_pipeline():
 
     res = input_pipeline.run(quick=True, write_json=False)
     print(f"input_pipeline,0,overlap_speedup="
-          f"{res['fit_sgd']['speedup']:.2f}x")
+          f"{res['results']['fit_sgd']['speedup']:.2f}x")
+
+
+def bench_shard_ownership():
+    """Chunk-ownership locality: files opened per host vs stride baseline."""
+    from benchmarks import shard_ownership
+
+    res = shard_ownership.run(num_chunks=8, batches_per_chunk=4,
+                              batch_size=64, hosts=(1, 4),
+                              write_json=False)
+    row = res["results"]["sweep"][-1]
+    print(f"shard_ownership,0,opens_per_host="
+          f"{row['stride_baseline']['max_files_opened']}->"
+          f"{row['ownership']['max_files_opened']}@H={row['hosts']}")
 
 
 def bench_kernels():
@@ -170,6 +183,7 @@ def main() -> None:
     bench_a2a_vs_allgather()
     bench_dpmr_step()
     bench_input_pipeline()
+    bench_shard_ownership()
     bench_kernels()
     bench_train_step()
     bench_roofline()

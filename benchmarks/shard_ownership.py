@@ -1,0 +1,149 @@
+"""Shard-ownership benchmark: file opens per host + load imbalance.
+
+The paper's locality premise: each node maps only over the sample shards
+it owns. Before ownership, `ShardedLoader` strode over *batches* (host h
+read batches h, h+H, ...), so every host opened every chunk file — C opens
+per host, H·C across the job. With chunk-aligned ownership each host opens
+only its own ⌈C/H⌉ files. This benchmark measures both modes on a real
+`file_sparse` corpus and emits `BENCH_shard_ownership.json` with the
+shared envelope (`name` / `config` / `results`):
+
+  files_opened    per-host unique chunk files touched over one epoch,
+                  stride baseline vs ownership (target: C -> ~C/H)
+  read_amplification
+                  total chunk loads across hosts / C (stride pays ~H x,
+                  ownership pays 1 x)
+  load_imbalance  max/mean owned batches per host (chunk granularity
+                  costs imbalance when C % H != 0 — the locality price)
+  epoch_wall_s    wall-clock for every host to drain one epoch
+                  sequentially (single-process simulation; the file-read
+                  savings dominate on a cold page cache)
+
+    PYTHONPATH=src python benchmarks/shard_ownership.py
+    PYTHONPATH=src python benchmarks/shard_ownership.py --chunks 32 \
+        --hosts 1 2 4 8
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import tempfile
+import time
+
+from repro.data import ShardedLoader, get_source, write_file_corpus
+
+
+def _drain_epoch(directory: str, host: int, hosts: int, ownership: str):
+    """One host's epoch over a FRESH source; returns its read stats +
+    batches served + wall time."""
+    src = get_source("file_sparse", directory=directory, cache_chunks=2)
+    loader = ShardedLoader(src, placement="host", prefetch=0,
+                           host_index=host, num_hosts=hosts,
+                           ownership=ownership)
+    t0 = time.perf_counter()
+    served = sum(1 for _ in loader.epoch())
+    wall = time.perf_counter() - t0
+    return {"host": host, "batches": served, "wall_s": wall,
+            **src.read_stats}
+
+
+def _mode_rows(directory: str, hosts: int, num_chunks: int, ownership: str):
+    per_host = [_drain_epoch(directory, h, hosts, ownership)
+                for h in range(hosts)]
+    opened = [r["unique_chunks"] for r in per_host]
+    batches = [r["batches"] for r in per_host]
+    mean_b = sum(batches) / len(batches)
+    return {
+        "files_opened_per_host": opened,
+        "max_files_opened": max(opened),
+        "read_amplification": sum(r["chunk_loads"] for r in per_host)
+        / num_chunks,
+        "batches_per_host": batches,
+        "load_imbalance": max(batches) / mean_b if mean_b else float("inf"),
+        "epoch_wall_s": round(sum(r["wall_s"] for r in per_host), 4),
+    }
+
+
+def run(num_chunks: int = 16, batches_per_chunk: int = 4,
+        batch_size: int = 256, hosts=(1, 2, 4), log2_features: int = 14,
+        write_json: bool = True) -> dict:
+    f = 1 << log2_features
+    num_batches = num_chunks * batches_per_chunk
+    tmp = tempfile.mkdtemp(prefix="repro_shard_ownership_")
+    results = {"sweep": []}
+    try:
+        write_file_corpus(
+            tmp, get_source("zipf_sparse", batch_size=batch_size,
+                            num_batches=num_batches, num_features=f,
+                            features_per_sample=32),
+            batches_per_chunk=batches_per_chunk)
+        for h in hosts:
+            owned = _mode_rows(tmp, h, num_chunks, "auto")
+            stride = _mode_rows(tmp, h, num_chunks, "stride")
+            ceil_ch = -(-num_chunks // h)
+            assert owned["max_files_opened"] == ceil_ch, (
+                "ownership must open exactly the owned ceil(C/H) range",
+                h, owned)
+            # the stride baseline touches every chunk containing one of this
+            # host's strided batch indices — the full corpus whenever
+            # H <= batches_per_chunk, fewer (but always >= ownership) when
+            # the stride jumps whole chunks
+            spe = (num_batches // h) * h
+            stride_expect = max(
+                len({i // batches_per_chunk for i in range(hh, spe, h)})
+                for hh in range(h))
+            assert stride["max_files_opened"] == stride_expect, (
+                "stride baseline open count mismatch", h, stride)
+            assert stride["max_files_opened"] >= owned["max_files_opened"], (
+                h, stride, owned)
+            results["sweep"].append({
+                "hosts": h, "chunks": num_chunks,
+                "owned_files_per_host": ceil_ch,
+                "ownership": owned, "stride_baseline": stride,
+                "open_reduction": stride["max_files_opened"]
+                / owned["max_files_opened"],
+            })
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    out = {
+        "name": "shard_ownership",
+        "config": {"chunks": num_chunks,
+                   "batches_per_chunk": batches_per_chunk,
+                   "num_batches": num_batches, "batch_size": batch_size,
+                   "num_features": f, "hosts": list(hosts)},
+        "results": results,
+    }
+    if write_json:
+        with open("BENCH_shard_ownership.json", "w") as fh:
+            json.dump(out, fh, indent=2)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--chunks", type=int, default=16)
+    ap.add_argument("--batches-per-chunk", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--hosts", type=int, nargs="+", default=[1, 2, 4])
+    ap.add_argument("--log2-features", type=int, default=14)
+    args = ap.parse_args()
+    out = run(num_chunks=args.chunks,
+              batches_per_chunk=args.batches_per_chunk,
+              batch_size=args.batch, hosts=tuple(args.hosts),
+              log2_features=args.log2_features)
+    print(f"{'hosts':>6s} {'opens/host own':>15s} {'opens/host stride':>18s} "
+          f"{'read amp own':>13s} {'read amp stride':>16s} "
+          f"{'imbalance':>10s}")
+    for row in out["results"]["sweep"]:
+        o, s = row["ownership"], row["stride_baseline"]
+        print(f"{row['hosts']:>6d} {o['max_files_opened']:>15d} "
+              f"{s['max_files_opened']:>18d} {o['read_amplification']:>13.2f} "
+              f"{s['read_amplification']:>16.2f} {o['load_imbalance']:>10.3f}")
+    print("wrote BENCH_shard_ownership.json")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -15,7 +15,6 @@ cost model is the only thing separating P=1 from P=256.
 """
 from __future__ import annotations
 
-import json
 
 from repro.configs.base import DPMRConfig
 from repro.core import dpmr

@@ -2,7 +2,8 @@
 registered strategy on the multi-pod production geometry, plus convergence
 parity of the new strategies against the paper-faithful `a2a`.
 
-Emits `BENCH_strategy_hierarchy.json` with
+Emits `BENCH_strategy_hierarchy.json` (shared envelope: `name` / `config` /
+`results`, validated by `scripts/check_bench.py`) whose results carry
 
   wire         per-strategy inner (ICI) / outer (DCN) bytes per device per
                step at the paper's full-batch regime on the (2, 16, 16)
@@ -98,13 +99,17 @@ def run(write_json: bool = True, iterations: int = 6) -> dict:
         by_name["a2a"]["outer_bytes"], (
         "hier_a2a must cross DCN with strictly fewer bytes than flat a2a "
         "at the headline geometry", by_name)
+    # shared BENCH envelope (scripts/check_bench.py): name/config/results
     results = {
-        "geometry": {"shards": P, "pods": PODS,
-                     "global_batch": GLOBAL_BATCH,
-                     "features": FEATURES, "features_per_sample": K},
-        "wire": wire,
-        "crossover": crossover_rows(),
-        "convergence": convergence_parity(iterations),
+        "name": "strategy_hierarchy",
+        "config": {"shards": P, "pods": PODS,
+                   "global_batch": GLOBAL_BATCH,
+                   "features": FEATURES, "features_per_sample": K},
+        "results": {
+            "wire": wire,
+            "crossover": crossover_rows(),
+            "convergence": convergence_parity(iterations),
+        },
     }
     if write_json:
         with open("BENCH_strategy_hierarchy.json", "w") as fh:
@@ -113,7 +118,7 @@ def run(write_json: bool = True, iterations: int = 6) -> dict:
 
 
 def main():
-    res = run()
+    res = run()["results"]
     print(f"{'strategy':>18s} {'ICI B/dev':>12s} {'DCN B/dev':>12s}")
     for r in res["wire"]:
         print(f"{r['strategy']:>18s} {r['inner_bytes']:>12.3e} "

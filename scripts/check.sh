@@ -1,18 +1,50 @@
 #!/usr/bin/env bash
 # Repo health check: bytecode-compiles the tree, runs the fast tier-1 tests,
 # and smokes the public API registries. ROADMAP.md references this as the
-# pre-PR gate; run the full (slow-inclusive) suite with
+# pre-PR gate and .github/workflows/ci.yml runs it on every push/PR; run the
+# full (slow-inclusive) suite with
 #   PYTHONPATH=src python -m pytest -q
+#
+# CI hardening: every section runs under a hard `timeout` (a hung section
+# fails the job instead of eating the runner), the header pins the exact
+# python/jax/numpy versions + test seed the run used, and the quickstart
+# smoke fails on any DeprecationWarning raised from repro.* code (the
+# public example must never exercise a deprecated surface).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+# one knob scales every section bound (slow CI runners: SECTION_TIMEOUT_SCALE=3)
+T="${SECTION_TIMEOUT_SCALE:-1}"
+t() { timeout "$(( $1 * T ))" "${@:2}"; }
+
+echo "== environment header (versions + seed) =="
+export PYTEST_SEED="${PYTEST_SEED:-0}"
+export PYTHONHASHSEED="${PYTHONHASHSEED:-$PYTEST_SEED}"
+t 60 python -c "
+import os, platform, sys
+import jax, jaxlib, numpy, pytest
+print(f'python    {platform.python_version()} ({sys.platform})')
+print(f'jax       {jax.__version__}  jaxlib {jaxlib.__version__}')
+print(f'numpy     {numpy.__version__}')
+print(f'pytest    {pytest.__version__}')
+print(f'devices   {jax.device_count()}x {jax.devices()[0].platform}')
+print(f'seed      PYTEST_SEED={os.environ[\"PYTEST_SEED\"]} '
+      f'PYTHONHASHSEED={os.environ[\"PYTHONHASHSEED\"]}')
+"
 
 echo "== compileall =="
-python -m compileall -q src benchmarks examples tests
+t 120 python -m compileall -q src benchmarks examples tests scripts
+
+echo "== lint (ruff, rule set in pyproject.toml) =="
+if command -v ruff >/dev/null 2>&1; then
+    t 120 ruff check .
+else
+    echo "ruff not installed; skipped locally (CI installs and enforces it)"
+fi
 
 echo "== strategy/source-registry / engine smoke =="
-python -c "
+t 300 python -c "
 from repro.api import DPMREngine, list_strategies, get_strategy
 names = list_strategies()
 assert {'a2a', 'allgather', 'psum_scatter', 'hier_a2a',
@@ -29,7 +61,7 @@ print('registries OK:', names, snames)
 "
 
 echo "== strategy wire-model smoke (every strategy, 1-device mesh, both tiers) =="
-python -c "
+t 300 python -c "
 from repro.api import list_strategies, get_strategy
 from repro.api.strategies import WireBytes
 from repro.configs.base import DPMRConfig
@@ -49,13 +81,51 @@ for n in list_strategies():
 print('wire models OK (inner/outer tiers):', list_strategies())
 "
 
-echo "== docs link-check (every docs/*.md code path exists) =="
-python scripts/check_docs.py
+echo "== shard-ownership smoke (chunk-aligned per-host ranges) =="
+t 300 python -c "
+import tempfile
+from repro.data import ShardedLoader, get_source, write_file_corpus
+tmp = tempfile.mkdtemp()
+write_file_corpus(tmp, get_source('zipf_sparse', batch_size=16,
+                                  num_batches=8, num_features=1 << 10,
+                                  features_per_sample=8),
+                  batches_per_chunk=2)              # 4 chunks
+for h in range(2):
+    src = get_source('file_sparse', directory=tmp)
+    loader = ShardedLoader(src, placement='host', prefetch=0,
+                           host_index=h, num_hosts=2)
+    assert loader.assignment.kind == 'chunk', loader.assignment
+    assert sum(1 for _ in loader.epoch()) == 4
+    assert src.read_stats['unique_chunks'] == 2, (h, src.read_stats)
+print('shard ownership OK: each host opened only its 2 of 4 chunks')
+"
 
-echo "== quickstart smoke (engine + data plane end to end) =="
-python examples/quickstart.py
+echo "== docs link-check (every docs/*.md code path exists) =="
+t 120 python scripts/check_docs.py
+
+echo "== bench-artifact envelope check (BENCH_*.json) =="
+t 120 python scripts/check_bench.py
+
+echo "== quickstart smoke (engine + data plane; deprecation-clean) =="
+t 600 python -c "
+import runpy, sys, warnings
+with warnings.catch_warnings(record=True) as caught:
+    warnings.simplefilter('always', DeprecationWarning)
+    runpy.run_path('examples/quickstart.py', run_name='__main__')
+bad = [w for w in caught
+       if issubclass(w.category, DeprecationWarning)
+       and '/repro/' in (w.filename or '').replace('\\\\', '/')]
+for w in bad:
+    print(f'DEPRECATION from repro.*: {w.filename}:{w.lineno}: '
+          f'{w.message}', file=sys.stderr)
+if bad:
+    sys.exit('quickstart must not exercise deprecated repro surfaces')
+print('quickstart OK (no repro.* DeprecationWarnings)')
+"
 
 echo "== tier-1 tests (fast; -m 'not slow') =="
-python -m pytest -x -q -m "not slow"
+# must stay under CI's 15-minute job cap so a hang fails HERE with a
+# section-level diagnostic, not as a generic job timeout (~7 min healthy)
+t 660 python -m pytest -x -q -m "not slow"
 
 echo "ALL CHECKS PASSED"

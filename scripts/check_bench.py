@@ -1,0 +1,67 @@
+#!/usr/bin/env python
+"""Benchmark-artifact check: every `BENCH_*.json` in the repo root must
+parse and carry the shared envelope
+
+    {"name": <non-empty str>, "config": <dict>, "results": <non-empty dict>}
+
+so downstream tooling (CI trend lines, cross-PR diffs) can consume any
+artifact without per-benchmark knowledge. Writers: see
+`benchmarks/input_pipeline.py`, `benchmarks/strategy_hierarchy.py`,
+`benchmarks/shard_ownership.py`.
+
+Run directly (exits non-zero listing violations) or through
+scripts/check.sh / `.github/workflows/ci.yml`.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+ENVELOPE = {"name": str, "config": dict, "results": dict}
+
+
+def check_file(path: pathlib.Path) -> list:
+    errors = []
+    try:
+        data = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path.name}: unparseable JSON ({e})"]
+    if not isinstance(data, dict):
+        return [f"{path.name}: top level must be an object, "
+                f"got {type(data).__name__}"]
+    for key, typ in ENVELOPE.items():
+        if key not in data:
+            errors.append(f"{path.name}: missing envelope key {key!r}")
+        elif not isinstance(data[key], typ):
+            errors.append(f"{path.name}: {key!r} must be "
+                          f"{typ.__name__}, got "
+                          f"{type(data[key]).__name__}")
+    if isinstance(data.get("name"), str) and not data["name"]:
+        errors.append(f"{path.name}: 'name' must be non-empty")
+    if isinstance(data.get("results"), dict) and not data["results"]:
+        errors.append(f"{path.name}: 'results' must be non-empty")
+    return errors
+
+
+def check(root: pathlib.Path = ROOT) -> list:
+    paths = sorted(root.glob("BENCH_*.json"))
+    if not paths:
+        return []          # a repo with no artifacts yet is not broken
+    return [e for p in paths for e in check_file(p)]
+
+
+def main() -> int:
+    errors = check()
+    for e in errors:
+        print(f"BENCH CHECK: {e}", file=sys.stderr)
+    if not errors:
+        n = len(sorted(ROOT.glob("BENCH_*.json")))
+        print(f"bench envelope OK ({n} artifacts)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

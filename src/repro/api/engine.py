@@ -343,7 +343,8 @@ class DPMREngine:
         return step
 
     def restore(self, directory: str, step: Optional[int] = None, *,
-                loader: Optional[ShardedLoader] = None) -> Dict:
+                loader: Optional[ShardedLoader] = None,
+                on_host_change: str = "error") -> Dict:
         """Restore state in place (latest step by default); returns the
         checkpoint manifest. Leaves are placed under the engine's current
         shardings, so restoring onto a different mesh re-shards (for a mesh
@@ -351,7 +352,11 @@ class DPMREngine:
 
         If the checkpoint carries a data cursor and a loader is available
         (`loader=` or the engine's attached one), the loader is sought to
-        it — training continues on the exact next batch."""
+        it — training continues on the exact next batch.
+        `on_host_change="reassign"` accepts a cursor recorded under a
+        different data-plane host count: shard ownership is recomputed for
+        the new geometry and the stream resumes at the epoch boundary
+        (mirrors the strategy-carry reset on elastic mesh rescale)."""
         with compat.set_mesh(self.mesh):
             self.state, manifest = Checkpointer(directory).restore(
                 self.state, step=step)
@@ -370,7 +375,8 @@ class DPMREngine:
         data_state = manifest.get("extra", {}).get("data")
         if data_state is not None:
             if loader is not None:
-                loader.load_state_dict(data_state)
+                loader.load_state_dict(data_state,
+                                       on_host_change=on_host_change)
             else:
                 warnings.warn(
                     "checkpoint carries a data cursor "

@@ -6,7 +6,7 @@ as static arguments to jitted step builders.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 # ---------------------------------------------------------------------------
 # Hardware constants (TPU v5e) used by the roofline analysis.

@@ -43,7 +43,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
 from repro.configs.base import DPMRConfig
-from repro.core import hot_sharding, sparse
+from repro.core import hot_sharding
 from repro.kernels import ops
 from repro.optim import optimizers, schedules
 

@@ -24,7 +24,6 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 
 def dpmr_dense_linear_ref(w_shard, x, axis: str):

@@ -5,14 +5,17 @@
 
 Sources are deterministic, seekable batch stores selected by name
 (`zipf_sparse`, `lm_markov`, `file_sparse`, user-registered); the loader
-fronts one with host sharding, mesh-divisibility conformance, background
-prefetch, and an explicit resumable `Cursor`. `DPMREngine.fit/fit_sgd/
-evaluate` accept a loader (or a source name + spec) directly.
+fronts one with per-host shard ownership (chunk-aligned file ranges via
+the `owned_shards` seam / `ShardAssignment`, stride interleaving for
+synthetic sources), mesh-divisibility conformance, background prefetch,
+and an explicit resumable `Cursor`. `DPMREngine.fit/fit_sgd/evaluate`
+accept a loader (or a source name + spec) directly.
 
 The legacy generators (`sparse_corpus.batches`, `pipeline.LMDataset.iterate`)
 are thin deprecation shims over the same batch functions.
 """
 from repro.data.loader import Cursor, ShardedLoader
+from repro.data.ownership import ShardAssignment, reassign_state
 from repro.data.sources import (
     DataSource,
     FileSparseSource,
@@ -26,6 +29,7 @@ from repro.data.sources import (
 
 __all__ = [
     "Cursor", "DataSource", "FileSparseSource", "LMMarkovSource",
-    "ShardedLoader", "ZipfSparseSource", "get_source", "list_sources",
-    "register_source", "write_file_corpus",
+    "ShardAssignment", "ShardedLoader", "ZipfSparseSource", "get_source",
+    "list_sources", "reassign_state", "register_source",
+    "write_file_corpus",
 ]

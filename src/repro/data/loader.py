@@ -2,14 +2,19 @@
 
 One loader owns everything between a `DataSource` and the training step:
 
-  host sharding     with H hosts, host h reads global batches h, h+H, ...
-                    (each host streams its own sample shard, the paper's
-                    per-node HDFS blocks); `steps_per_epoch` is the
-                    even-length floor `num_batches // H`. NB: per-batch
-                    interleaving means a chunked `file_sparse` corpus is
-                    read by every host (Hx read amplification) — chunk-
-                    aligned per-host ranges are a ROADMAP open item
-                    ("multi-process file-shard ownership").
+  shard ownership   the source's `owned_shards(host, num_hosts)` seam
+                    decides what host h of H reads. File-backed sources
+                    (`file_sparse`) return chunk-aligned contiguous ranges:
+                    host h owns a balanced run of ⌈C/H⌉ or ⌊C/H⌋ chunk
+                    files and OPENS ONLY THOSE — the paper's per-node
+                    HDFS blocks,
+                    with `steps_per_epoch` the exact owned batch count
+                    (uneven across hosts when C % H != 0). Synthetic sources
+                    declare the `stride` kind (host h reads global batches
+                    h, h+H, ...; `steps_per_epoch` is the even floor
+                    `num_batches // H`); `ownership="stride"` forces that
+                    interleaving on any source (the pre-ownership baseline,
+                    with its H× file-read amplification).
   conformance       global batch size must divide by the mesh's shard count
                     P (shard_map constraint); the loader drops the remainder
                     rows (default) or zero-pads (`remainder="pad"`; sparse
@@ -33,11 +38,20 @@ One loader owns everything between a `DataSource` and the training step:
                     ahead never moves it, so a checkpoint taken mid-stream
                     is exact.
   shuffling         `shuffle=True` visits each epoch's batches in a fresh
-                    pseudorandom order: a global permutation seeded by
-                    `(shuffle_seed, epoch)` is striped over hosts, so every
-                    epoch covers the same batch set, hosts stay disjoint,
-                    and resume-exactness is preserved (the permutation is
-                    recomputed from the cursor's epoch, never stored).
+                    pseudorandom order. Stride mode: a global permutation
+                    seeded by `(shuffle_seed, epoch)` is striped over hosts.
+                    Chunk-ownership mode: the permutation is over CHUNKS
+                    WITHIN THIS OWNER — seeded by `(shuffle_seed, epoch,
+                    host)` — and batches inside a chunk stay consecutive,
+                    so shuffling never breaks chunk locality (each owned
+                    file is still read once, sequentially). Either way
+                    hosts stay disjoint and resume-exactness is preserved
+                    (the permutation is recomputed from the cursor's
+                    epoch, never stored). Chunk mode covers exactly the
+                    owned batch set every epoch; stride mode covers the
+                    first H*(n//H) entries of each epoch's permutation, so
+                    when H does not divide n the dropped tail differs
+                    between epochs.
 
     loader = ShardedLoader(get_source("zipf_sparse", batch_size=512,
                                       num_batches=8), mesh)
@@ -59,6 +73,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.data.ownership import ShardAssignment, reassign_state
 from repro.data.sources import DataSource
 
 
@@ -107,6 +122,12 @@ class ShardedLoader:
     host_index / num_hosts:
                    this process's slice of the batch stream; default
                    jax.process_index()/process_count()
+    ownership:     "auto" (default) asks the source's `owned_shards(host,
+                   num_hosts)` seam — file-backed sources return
+                   chunk-aligned contiguous per-host ranges so this host
+                   opens only its own chunk files; "stride" forces the
+                   synthetic interleaving (host h reads batches h, h+H,
+                   ...) on any source, the pre-ownership baseline
     batch_divisor: override the divisibility constraint (default: product
                    of mesh axis sizes under "sharded", else 1)
     remainder:     "drop" (default) or "pad" when batch_size % divisor != 0.
@@ -131,6 +152,7 @@ class ShardedLoader:
                  placement: Union[str, Callable] = "sharded",
                  host_index: Optional[int] = None,
                  num_hosts: Optional[int] = None,
+                 ownership: str = "auto",
                  batch_divisor: Optional[int] = None,
                  remainder: str = "drop",
                  prefetch: int = 2,
@@ -164,12 +186,47 @@ class ShardedLoader:
                 for a in mesh.axis_names:
                     batch_divisor *= int(mesh.shape[a])
         self.batch_divisor = int(batch_divisor)
-        n = epoch_size if epoch_size is not None else source.num_batches
-        self.steps_per_epoch = None if n is None else int(n) // self.num_hosts
-        if self.steps_per_epoch is not None and self.steps_per_epoch < 1:
-            raise ValueError(
-                f"source has {n} batches for {self.num_hosts} hosts: "
-                "fewer than one batch per host per epoch")
+
+        # -- shard ownership: what does host h of H read? -------------------
+        if ownership not in ("auto", "stride"):
+            raise ValueError(f"ownership must be 'auto'|'stride': "
+                             f"{ownership!r}")
+        assignment = None
+        if ownership == "auto":
+            seam = getattr(source, "owned_shards", None)
+            if callable(seam):
+                assignment = seam(self.host_index, self.num_hosts)
+        # stride-kind declarations keep the legacy index arithmetic below;
+        # only chunk-kind assignments change the iteration order contract
+        self._assignment = assignment if (
+            assignment is not None and assignment.kind == "chunk") else None
+        self.assignment_kind = "chunk" if self._assignment is not None \
+            else "stride"
+
+        if self._assignment is not None:
+            if epoch_size is not None:
+                raise ValueError(
+                    "epoch_size= conflicts with chunk ownership: the epoch "
+                    "is this host's owned chunk range; pass "
+                    "ownership='stride' to override the source's assignment")
+            n = self._assignment.num_batches
+            self.steps_per_epoch = self._assignment.steps_per_epoch(
+                self.host_index)
+            if self.steps_per_epoch < 1:
+                raise ValueError(
+                    f"host {self.host_index} of {self.num_hosts} owns no "
+                    f"chunks: the corpus has only "
+                    f"{self._assignment.num_chunks} chunk files; use fewer "
+                    "hosts or re-chunk the corpus with a smaller "
+                    "batches_per_chunk")
+        else:
+            n = epoch_size if epoch_size is not None else source.num_batches
+            self.steps_per_epoch = None if n is None \
+                else int(n) // self.num_hosts
+            if self.steps_per_epoch is not None and self.steps_per_epoch < 1:
+                raise ValueError(
+                    f"source has {n} batches for {self.num_hosts} hosts: "
+                    "fewer than one batch per host per epoch")
         self.shuffle = bool(shuffle)
         self.shuffle_seed = int(shuffle_seed)
         if self.shuffle and n is None:
@@ -178,8 +235,15 @@ class ShardedLoader:
                 "source a num_batches or pass epoch_size=")
         self._epoch_batches = None if n is None else int(n)
         self._perm_cache = (None, None)   # (epoch, permutation)
+        self._order_cache = (None, None)  # (epoch, owned batch order)
         self._cursor = cursor if cursor is not None else Cursor()
         self._seek_token = 0   # bumped by seek(); invalidates live iterators
+
+    @property
+    def assignment(self) -> Optional[ShardAssignment]:
+        """The global chunk `ShardAssignment` in force, or None when this
+        loader reads by stride (synthetic sources, ownership='stride')."""
+        return self._assignment
 
     # -- cursor -------------------------------------------------------------
 
@@ -200,23 +264,81 @@ class ShardedLoader:
         self._cursor = cursor
 
     def state_dict(self) -> Dict:
-        return {"cursor": self._cursor.to_dict(),
-                "source": self.source_name,
-                "batch_size": int(getattr(self.source, "batch_size", 0)),
-                "num_hosts": self.num_hosts,
-                "shuffle": self.shuffle,
-                "shuffle_seed": self.shuffle_seed}
+        d = {"cursor": self._cursor.to_dict(),
+             "source": self.source_name,
+             "batch_size": int(getattr(self.source, "batch_size", 0)),
+             "num_hosts": self.num_hosts,
+             "host_index": self.host_index,
+             "ownership": self.assignment_kind,
+             "shuffle": self.shuffle,
+             "shuffle_seed": self.shuffle_seed}
+        if self._assignment is not None:
+            d["assignment"] = self._assignment.to_dict()
+        return d
 
-    def load_state_dict(self, state: Dict) -> None:
+    def load_state_dict(self, state: Dict, *,
+                        on_host_change: str = "error") -> None:
         """Restore a `state_dict()` position, validating that the stream it
-        was recorded against is the one this loader reads."""
+        was recorded against is the one this loader reads.
+
+        `on_host_change` decides what happens when the state was recorded
+        under a DIFFERENT host count (elastic rescale): "error" (default)
+        refuses — the host-local step addresses someone else's stream —
+        while "reassign" rewrites the state via
+        `repro.data.ownership.reassign_state` (the epoch survives, the step
+        resets to the epoch start, this loader's own assignment takes
+        over; every chunk is owned exactly once under the new geometry)."""
+        if on_host_change not in ("error", "reassign"):
+            raise ValueError(f"on_host_change must be 'error'|'reassign': "
+                             f"{on_host_change!r}")
         saved_hosts = state.get("num_hosts")
         if saved_hosts is not None and int(saved_hosts) != self.num_hosts:
-            raise ValueError(
-                f"cursor was recorded with num_hosts={saved_hosts} but this "
-                f"loader shards over {self.num_hosts} hosts — the host-local "
-                "step would address a different sample stream; recompute the "
-                "position for the new host count before seeking")
+            if on_host_change == "reassign":
+                warnings.warn(
+                    f"cursor was recorded with num_hosts={saved_hosts}; "
+                    f"reassigning shards over {self.num_hosts} hosts — "
+                    "resuming at the start of epoch "
+                    f"{int(state.get('cursor', {}).get('epoch', 0))} "
+                    "(correct-by-reassignment, not bit-exact: the "
+                    "interrupted epoch is re-read under the new ownership)",
+                    RuntimeWarning, stacklevel=2)
+                state = reassign_state(state, self.num_hosts,
+                                       self.host_index)
+            else:
+                raise ValueError(
+                    f"cursor was recorded with num_hosts={saved_hosts} but "
+                    f"this loader shards over {self.num_hosts} hosts — the "
+                    "host-local step would address a different sample "
+                    "stream; pass on_host_change='reassign' (or rewrite the "
+                    "state with runtime/elastic.py::reshard_data_state) to "
+                    "resume at the epoch boundary under the new assignment")
+        saved_host = state.get("host_index")
+        if saved_host is not None and int(saved_host) != self.host_index:
+            warnings.warn(
+                f"cursor was recorded by host {saved_host} but this loader "
+                f"is host {self.host_index}; the step addresses that "
+                "host's shard — resume is only exact on the recording host",
+                RuntimeWarning, stacklevel=2)
+        saved_kind = state.get("ownership")
+        if saved_kind is not None and saved_kind != self.assignment_kind:
+            warnings.warn(
+                f"cursor was recorded under {saved_kind!r} ownership but "
+                f"this loader reads by {self.assignment_kind!r}; the step "
+                "index addresses a differently-ordered stream — resume is "
+                "not exact", RuntimeWarning, stacklevel=2)
+        saved_assign = state.get("assignment")
+        if (saved_assign is not None and self._assignment is not None
+                and int(saved_assign.get("num_hosts", self.num_hosts))
+                == self.num_hosts
+                and saved_assign != self._assignment.to_dict()):
+            warnings.warn(
+                "cursor was recorded against a different chunk assignment "
+                f"({saved_assign.get('num_chunks')} chunks x "
+                f"{saved_assign.get('batches_per_chunk')} batches) than "
+                f"this corpus ({self._assignment.num_chunks} x "
+                f"{self._assignment.batches_per_chunk}); the step "
+                "addresses different samples — resume is not exact",
+                RuntimeWarning, stacklevel=2)
         saved_source = state.get("source")
         if saved_source is not None and saved_source != self.source_name:
             warnings.warn(
@@ -338,14 +460,37 @@ class ShardedLoader:
             self._perm_cache = (epoch, perm)
         return perm
 
+    def _owned_order(self, epoch: int) -> np.ndarray:
+        """Chunk-ownership read order for one epoch: this host's owned
+        chunks — permuted per epoch when shuffling, seeded by
+        (shuffle_seed, epoch, host) so hosts draw independent orders —
+        with batches inside each chunk kept consecutive (every owned file
+        is read once, sequentially). A pure function of the cursor's
+        epoch, so seeking reconstructs it exactly."""
+        cached_epoch, order = self._order_cache
+        if cached_epoch != epoch:
+            a = self._assignment
+            chunks = list(a.owned_chunks(self.host_index))
+            if self.shuffle:
+                rng = np.random.default_rng(np.random.SeedSequence(
+                    [self.shuffle_seed, epoch, self.host_index]))
+                chunks = [chunks[i] for i in rng.permutation(len(chunks))]
+            order = np.asarray([i for c in chunks
+                                for i in a.chunk_batches(c)], dtype=np.int64)
+            self._order_cache = (epoch, order)
+        return order
+
     def _load(self, pos: Cursor) -> Dict[str, np.ndarray]:
         # content is a pure function of the cursor: without shuffling it
         # depends only on `step` (every epoch re-reads the same shard in
         # the same order, the deterministic full-batch regime); with
         # shuffling the epoch's permutation reorders the same batch set
-        index = pos.step * self.num_hosts + self.host_index
-        if self.shuffle:
-            index = int(self._permutation(pos.epoch)[index])
+        if self._assignment is not None:
+            index = int(self._owned_order(pos.epoch)[pos.step])
+        else:
+            index = pos.step * self.num_hosts + self.host_index
+            if self.shuffle:
+                index = int(self._permutation(pos.epoch)[index])
         return self._conform(self.source.batch(index))
 
     def _conform(self, batch: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:

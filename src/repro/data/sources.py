@@ -44,6 +44,7 @@ from typing import Callable, Dict, Iterator, List, Optional
 import numpy as np
 
 from repro.data import sparse_corpus
+from repro.data.ownership import ShardAssignment
 from repro.data.pipeline import LMDataConfig, LMDataset, encdec_batch
 
 
@@ -74,6 +75,22 @@ class DataSource:
                 return
             yield self.batch(i)
             i += 1
+
+    def owned_shards(self, host: int, num_hosts: int
+                     ) -> Optional[ShardAssignment]:
+        """The global `ShardAssignment` dividing this corpus over
+        `num_hosts` hosts (`host` is validated against it).
+
+        File-backed sources return chunk-aligned contiguous ranges, so a
+        host opens only its own chunk files; synthetic sources have no
+        files to own and declare the `stride` interleaving (host h reads
+        batches h, h+H, ...). Unbounded streams return None — ownership
+        needs a bounded corpus to divide."""
+        if self.num_batches is None:
+            return None
+        a = ShardAssignment.strided(self.num_batches, num_hosts)
+        a._check_host(host)
+        return a
 
     def _check_index(self, index: int) -> None:
         if index < 0 or (self.num_batches is not None
@@ -251,6 +268,12 @@ class FileSparseSource(DataSource):
     lock because a ShardedLoader's prefetch thread calls `batch` from a
     background thread). Sequential reads touch each file once; seeking
     (resume) costs one chunk read.
+
+    `owned_shards` divides the corpus into contiguous, chunk-aligned
+    per-host ranges (the tentpole of multi-process ownership): host h of H
+    owns a balanced ⌈C/H⌉-or-⌊C/H⌋ chunk range and never opens the rest.
+    `read_stats` counts actual chunk-file opens, so tests and
+    `benchmarks/shard_ownership.py` can assert the locality claim.
     """
 
     name = "file_sparse"
@@ -265,9 +288,31 @@ class FileSparseSource(DataSource):
         self.batch_size = int(self.manifest["batch_size"])
         self.num_batches = int(self.manifest["num_batches"])
         self.batches_per_chunk = int(self.manifest["batches_per_chunk"])
+        self.num_chunks = int(self.manifest["num_chunks"])
         self.cache_chunks = max(1, int(cache_chunks))
         self._lock = threading.Lock()
         self._cache: Dict[int, Dict[str, np.ndarray]] = {}
+        self._chunk_loads = 0
+        self._chunks_touched: set = set()
+
+    def owned_shards(self, host: int, num_hosts: int) -> ShardAssignment:
+        """Chunk-aligned contiguous ownership computed from the manifest."""
+        a = ShardAssignment.chunk_aligned(
+            self.num_chunks, num_hosts,
+            batches_per_chunk=self.batches_per_chunk,
+            num_batches=self.num_batches)
+        a._check_host(host)
+        return a
+
+    @property
+    def read_stats(self) -> Dict[str, int]:
+        """Chunk-file I/O since construction: `chunk_loads` counts every
+        np.load (cache misses included re-reads), `unique_chunks` the
+        distinct files touched — the number a host under chunk ownership
+        keeps at ⌈C/H⌉ instead of C."""
+        with self._lock:
+            return {"chunk_loads": self._chunk_loads,
+                    "unique_chunks": len(self._chunks_touched)}
 
     def batch(self, index: int) -> Dict[str, np.ndarray]:
         self._check_index(index)
@@ -277,6 +322,8 @@ class FileSparseSource(DataSource):
             if arrs is None:
                 with np.load(_shard_path(self.directory, chunk)) as z:
                     arrs = {k: z[k] for k in self.manifest["keys"]}
+                self._chunk_loads += 1
+                self._chunks_touched.add(chunk)
             self._cache[chunk] = arrs        # most recently used last
             while len(self._cache) > self.cache_chunks:
                 self._cache.pop(next(iter(self._cache)))

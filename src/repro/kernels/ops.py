@@ -10,7 +10,6 @@ interpreted kernel; on a TPU deployment `impl="pallas"` is the hot path.
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import ref as _ref

@@ -25,7 +25,6 @@ import re
 import subprocess
 import sys
 import time
-import traceback
 
 
 def _collectives_from_hlo(hlo: str):

@@ -31,8 +31,7 @@ from repro.configs.base import ParallelConfig, TrainConfig
 from repro.data import Cursor, ShardedLoader, get_source
 from repro.launch.mesh import make_host_mesh
 from repro.models import registry
-from repro.runtime.fault_tolerance import (FailureInjector, PreemptionGuard,
-                                           StragglerWatchdog)
+from repro.runtime.fault_tolerance import PreemptionGuard, StragglerWatchdog
 from repro.train import trainer
 
 log = logging.getLogger("repro.train")
@@ -55,9 +54,15 @@ def make_loader(args, cfg, mesh=None) -> ShardedLoader:
 
 
 def sparse_loop(args) -> dict:
-    """Sparse-face driver: DPMREngine + zipf_sparse loader, strategy by
-    name (--strategy), resumable via engine save()/restore() (state incl.
-    the strategy carry + the loader cursor)."""
+    """Sparse-face driver: DPMREngine + zipf_sparse loader (or, with
+    --data-dir, a file_sparse corpus under chunk-aligned shard ownership),
+    strategy by name (--strategy), resumable via engine save()/restore()
+    (state incl. the strategy carry + the loader cursor).
+
+    --hosts/--host-id simulate one host of a multi-process data plane in
+    a single process: the loader serves ONLY this host's shard (its owned
+    chunk range for file corpora, its batch stride otherwise). A real
+    multi-host deployment runs one such process per host."""
     from repro.api import DPMREngine, ShardedLoader, get_source, get_strategy
     from repro.ckpt.checkpointer import Checkpointer as Ck
     from repro.configs.base import DPMRConfig
@@ -68,16 +73,27 @@ def sparse_loop(args) -> dict:
                      max_features_per_sample=32,
                      distribution=args.strategy, optimizer="adagrad",
                      learning_rate=args.lr)
+    if args.data_dir:
+        source = get_source("file_sparse", directory=args.data_dir)
+    else:
+        source = get_source("zipf_sparse", batch_size=args.batch,
+                            num_batches=args.sparse_batches,
+                            num_features=args.features,
+                            features_per_sample=32, seed=args.data_seed)
     loader = ShardedLoader(
-        get_source("zipf_sparse", batch_size=args.batch,
-                   num_batches=args.sparse_batches,
-                   num_features=args.features, features_per_sample=32,
-                   seed=args.data_seed),
-        mesh, host_index=0, num_hosts=1, prefetch=args.prefetch,
-        shuffle=args.shuffle)
+        source, mesh, host_index=args.host_id, num_hosts=args.hosts,
+        prefetch=args.prefetch, shuffle=args.shuffle)
+    if loader.assignment is not None:
+        log.info("chunk ownership: host %d/%d owns chunks [%d, %d) of %d",
+                 args.host_id, args.hosts,
+                 loader.assignment.owned_chunks(args.host_id).start,
+                 loader.assignment.owned_chunks(args.host_id).stop,
+                 loader.assignment.num_chunks)
     engine = DPMREngine(cfg, mesh)
     if args.ckpt and Ck(args.ckpt).latest_step() is not None:
-        engine.restore(args.ckpt, loader=loader)
+        # reassign rather than refuse when --hosts changed between runs:
+        # the loop resumes at the epoch boundary under the new ownership
+        engine.restore(args.ckpt, loader=loader, on_host_change="reassign")
         log.info("resumed sparse run at step %d (strategy %s)",
                  int(engine.state.step), args.strategy)
     # checkpoint every --save-every steps (like the dense loop), so a
@@ -88,7 +104,17 @@ def sparse_loop(args) -> dict:
         history += engine.fit_sgd(loader, steps=chunk)
         if args.ckpt:
             engine.save(args.ckpt, keep=args.keep)
-    fns = engine.step_fns(args.batch)    # cached if fit already compiled it
+    try:
+        # the most recently used compilation — the CONFORMED global batch
+        # size fit_sgd actually trained on (the raw source batch size may
+        # not divide the mesh and would fail make_step_fns' divisibility
+        # assert)
+        fns = engine.fns
+    except RuntimeError:
+        # nothing trained this run (restored at/after --steps): compile at
+        # the size the loader would serve
+        bs = int(getattr(loader.source, "batch_size", 0)) or args.batch
+        fns = engine.step_fns(bs - bs % loader.batch_divisor or bs)
     wire = get_strategy(args.strategy).bytes_per_device(fns.ctx)
     return {"history": history, "last_step": int(engine.state.step),
             "strategy": args.strategy,
@@ -172,6 +198,16 @@ def build_parser():
                     help="sparse-face hashed feature-space size")
     ap.add_argument("--sparse-batches", type=int, default=64,
                     help="sparse-face corpus size in batches (one epoch)")
+    ap.add_argument("--data-dir", default="",
+                    help="sparse face: read a file_sparse corpus (written "
+                         "by write_file_corpus) from this directory under "
+                         "chunk-aligned shard ownership instead of the "
+                         "synthetic zipf_sparse stream")
+    ap.add_argument("--hosts", type=int, default=1,
+                    help="simulate a data plane divided over this many "
+                         "hosts (this process serves one of them)")
+    ap.add_argument("--host-id", type=int, default=0,
+                    help="which host of --hosts this process simulates")
     ap.add_argument("--shuffle", action="store_true",
                     help="per-epoch loader shuffling (seeded, resume-exact)")
     ap.add_argument("--smoke", action="store_true",

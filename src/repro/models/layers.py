@@ -10,7 +10,6 @@ is the TPU-optimized equivalent and is validated against this code).
 """
 from __future__ import annotations
 
-import functools
 import math
 from typing import Optional
 

@@ -9,9 +9,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Optional, Tuple
 
-import jax.numpy as jnp
 
-from repro import sharding
 from repro.configs import ARCH_IDS, get_config
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import encdec, mamba, transformer, xlstm

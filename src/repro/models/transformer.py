@@ -12,7 +12,6 @@ sharding *is* the DPMR dense face: XLA materializes per-layer all-gather
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -54,7 +53,6 @@ def _ffn(p, x, cfg: ModelConfig, moe_group: int = 512):
 def _constrain(x, spec_tail):
     """Shard batch over DP axes + given tail; no-op outside a mesh context."""
     try:
-        from repro.sharding import batch_spec
         import jax.interpreters.pxla  # noqa: F401
 
         mesh = compat.get_abstract_mesh()

@@ -19,7 +19,6 @@ tests/test_multidevice.py and benchmarks/strategy_hierarchy.py).
 """
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax

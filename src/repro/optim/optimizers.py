@@ -7,8 +7,7 @@ large archs (llama3-405b, mixtral) can run bf16 moments to fit HBM.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

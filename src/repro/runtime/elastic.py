@@ -4,9 +4,14 @@ Dense state (params/opt): checkpoints hold full logical arrays, so restoring
 under the new mesh's shardings is a device_put (ckpt/checkpointer.py). This
 module adds the DPMR sparse-face case, where the parameter table's PADDED
 length depends on the shard count (F rounded up to a multiple of P): growing
-or shrinking the mesh re-pads the table and re-shards.
+or shrinking the mesh re-pads the table and re-shards — and the data-plane
+case (`reshard_data_state`), where the loader cursor's host-local step was
+recorded against one shard assignment and the new host count needs a fresh
+one.
 """
 from __future__ import annotations
+
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -14,6 +19,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import DPMRConfig
 from repro.core import dpmr
+from repro.data.ownership import reassign_state
 
 
 def reshard_tree(tree, shardings):
@@ -57,3 +63,20 @@ def reshard_dpmr_state(state: dpmr.DPMRState, cfg: DPMRConfig, new_mesh
         step=jax.device_put(jax.device_get(state.step), rep),
         strat=jax.device_put(strat, shard),
     )
+
+
+def reshard_data_state(data_state: Dict, num_hosts: int,
+                       host_index: Optional[int] = None) -> Dict:
+    """Rewrite a loader `state_dict()` (a checkpoint's `extra["data"]`) for
+    a NEW data-plane host count — the input-face analogue of
+    `reshard_dpmr_state`.
+
+    The epoch (and with it the per-epoch shuffle permutations) survives;
+    the host-local step resets to the epoch start, and the restoring
+    loader recomputes its own chunk assignment, so every chunk is owned
+    exactly once under the new geometry and none are dropped — the same
+    correct-but-rebuilt contract as the strategy-carry reset above.
+    Equivalent to `loader.load_state_dict(state,
+    on_host_change="reassign")`; use this form when rewriting the state
+    before the new loaders exist (e.g. a checkpoint-surgery script)."""
+    return reassign_state(data_state, num_hosts, host_index)

@@ -1,9 +1,7 @@
 """Checkpoint manager + fault tolerance: atomicity, keep-N, resume
 determinism, failure-injected restart, elastic restore."""
 import os
-import shutil
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

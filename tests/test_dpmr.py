@@ -3,7 +3,6 @@ equivalence (a2a == allgather == psum_scatter == hier_a2a == dense oracle,
 compressed_reduce within quantization error), the two-tier wire model, the
 DPMREngine facade, capacity/overflow accounting, and checkpoint roundtrip
 (including the persistent strategy carry)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -10,7 +10,6 @@ import pytest
 from repro import compat
 from repro.configs import ARCH_IDS
 from repro.configs.base import ParallelConfig, TrainConfig
-from repro.data.pipeline import LMDataConfig, LMDataset, encdec_batch
 from repro.launch.mesh import make_host_mesh
 from repro.models import registry
 from repro.models.common import embed_init_scale
@@ -156,7 +155,7 @@ def test_blocked_attention_matches_reference():
 
 def test_masked_scan_attention_matches_triangular():
     from repro.models.layers import (_masked_scan_attention,
-                                     _triangular_attention, _repeat_kv)
+                                     _triangular_attention)
 
     rng = np.random.default_rng(4)
     b, s, h, d = 1, 64, 2, 8

