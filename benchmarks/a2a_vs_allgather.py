@@ -31,12 +31,18 @@ from repro.api.strategies import StrategyContext
 from repro.configs.base import DPMRConfig
 from repro.core import dpmr
 
-STRATEGIES = ("a2a", "allgather", "psum_scatter", "hier_a2a",
-              "compressed_reduce")
+# every registered strategy, dynamically — a newly registered one shows up
+# in the table without this benchmark having to know it (topk_reduce /
+# overlap_a2a arrived this way)
+def _strategies():
+    from repro.api import list_strategies
+
+    return tuple(list_strategies())
 
 
 def run(p: int = 256, batch: int = 1 << 16, k: int = 64,
-        strategies=STRATEGIES, pods: int = 1):
+        strategies=None, pods: int = 1):
+    strategies = _strategies() if strategies is None else strategies
     rows = []
     for logf in (20, 24, 27, 30, 33):
         f = 1 << logf
@@ -72,10 +78,10 @@ def _print_table(rows, names, tier=None):
 def main():
     rows = run()
     print("== single-tier mesh (P=256, all ICI): total bytes/device ==")
-    _print_table(rows, STRATEGIES)
+    _print_table(rows, _strategies())
     rows2 = run(p=512, batch=1 << 24, pods=2)
     print("\n== two-pod mesh (P=512, Po=2, full-batch regime): DCN tier ==")
-    _print_table(rows2, STRATEGIES, tier="outer")
+    _print_table(rows2, _strategies(), tier="outer")
     return rows + rows2
 
 

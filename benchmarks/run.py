@@ -105,6 +105,18 @@ def bench_shard_ownership():
           f"{row['ownership']['max_files_opened']}@H={row['hosts']}")
 
 
+def bench_strategy_overlap():
+    """Top-k wire reduction + overlap bit-identity (see strategy_overlap)."""
+    from benchmarks import strategy_overlap
+
+    rows = strategy_overlap.topk_wire_sweep()
+    at_default = next(r for r in rows if r["topk_frac"] == 0.25)
+    ov = strategy_overlap.overlap_rows(steps=5)
+    print(f"strategy_overlap,0,topk_total_wire_x"
+          f"{at_default['total_reduction_x']:.2f}"
+          f"_overlap_bit_identical={ov['bit_identical']}")
+
+
 def bench_kernels():
     """Interpret-mode kernel calls vs jnp oracle (correct-by-construction
     check is in tests; here: relative CPU wall time)."""
@@ -184,6 +196,7 @@ def main() -> None:
     bench_dpmr_step()
     bench_input_pipeline()
     bench_shard_ownership()
+    bench_strategy_overlap()
     bench_kernels()
     bench_train_step()
     bench_roofline()

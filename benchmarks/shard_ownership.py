@@ -107,12 +107,20 @@ def run(num_chunks: int = 16, batches_per_chunk: int = 4,
     finally:
         shutil.rmtree(tmp, ignore_errors=True)
 
+    # headline number for the CI regression gate (check_bench --compare):
+    # the best per-host open-count reduction over the host sweep — analytic
+    # (pure chunk arithmetic), so the 20% threshold flags real ownership
+    # regressions, not runner noise
+    results["max_open_reduction"] = max(
+        row["open_reduction"] for row in results["sweep"])
     out = {
         "name": "shard_ownership",
         "config": {"chunks": num_chunks,
                    "batches_per_chunk": batches_per_chunk,
                    "num_batches": num_batches, "batch_size": batch_size,
                    "num_features": f, "hosts": list(hosts)},
+        "primary_metric": {"path": "results.max_open_reduction",
+                           "higher_is_better": True},
         "results": results,
     }
     if write_json:

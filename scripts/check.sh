@@ -48,7 +48,8 @@ t 300 python -c "
 from repro.api import DPMREngine, list_strategies, get_strategy
 names = list_strategies()
 assert {'a2a', 'allgather', 'psum_scatter', 'hier_a2a',
-        'compressed_reduce'} <= set(names), names
+        'compressed_reduce', 'topk_reduce', 'overlap_a2a'} <= set(names), \
+    names
 for n in names:
     get_strategy(n)
 from repro.data import list_sources, get_source
@@ -60,10 +61,12 @@ assert {'constant', 'warmup_cosine'} <= set(schedules.SCHEDULES)
 print('registries OK:', names, snames)
 "
 
-echo "== strategy wire-model smoke (every strategy, 1-device mesh, both tiers) =="
+echo "== strategy wire-model smoke (every registered strategy, both tiers) =="
+# iterates list_strategies() DYNAMICALLY — a newly registered strategy is
+# covered the moment it exists and cannot silently skip the WireBytes check
 t 300 python -c "
 from repro.api import list_strategies, get_strategy
-from repro.api.strategies import WireBytes
+from repro.api.strategies import StrategyContext, WireBytes
 from repro.configs.base import DPMRConfig
 from repro.core import dpmr
 from repro.launch.mesh import make_host_mesh
@@ -72,12 +75,19 @@ mesh = make_host_mesh(1, 1)
 cfg = DPMRConfig(num_features=1 << 12, max_features_per_sample=16)
 ctx = dpmr.make_strategy_context(cfg, mesh,
                                  cap=dpmr.capacity(cfg, 128, mesh))
+# analytic multi-pod geometry: the two-tier split must be live, not a
+# degenerate single-number model
+pod = StrategyContext(axes=(), num_shards=8, block_size=1 << 9,
+                      capacity=64, outer_shards=2)
 for n in list_strategies():
     wb = get_strategy(n).bytes_per_device(ctx)
     assert isinstance(wb, WireBytes), (n, type(wb))
     assert wb.inner >= 0 and wb.outer >= 0, (n, wb)
     assert wb.total == wb.inner + wb.outer, (n, wb)
     assert wb.outer == 0, ('single-pod mesh must not cross DCN', n, wb)
+    wp = get_strategy(n).bytes_per_device(pod)
+    assert isinstance(wp, WireBytes) and wp.outer > 0, (
+        'multi-pod geometry must report DCN bytes', n, wp)
 print('wire models OK (inner/outer tiers):', list_strategies())
 "
 

@@ -1,26 +1,67 @@
 #!/usr/bin/env python
-"""Benchmark-artifact check: every `BENCH_*.json` in the repo root must
-parse and carry the shared envelope
+"""Benchmark-artifact check + regression gate.
+
+Envelope mode (default): every `BENCH_*.json` in the repo root must parse
+and carry the shared envelope
 
     {"name": <non-empty str>, "config": <dict>, "results": <non-empty dict>}
 
 so downstream tooling (CI trend lines, cross-PR diffs) can consume any
 artifact without per-benchmark knowledge. Writers: see
 `benchmarks/input_pipeline.py`, `benchmarks/strategy_hierarchy.py`,
-`benchmarks/shard_ownership.py`.
+`benchmarks/shard_ownership.py`, `benchmarks/strategy_overlap.py`.
+
+An artifact MAY additionally declare its headline number:
+
+    "primary_metric": {"path": "results.topk_wire_reduction_x",
+                       "higher_is_better": true}
+
+`path` is a dotted path into the artifact (integer components index into
+lists). When present it is validated — the path must resolve to a number.
+
+Compare mode (the CI bench-regression gate):
+
+    check_bench.py --compare FRESH [BASELINE] [--threshold 0.2]
+
+diffs a freshly produced artifact against the committed baseline (default:
+the same filename in the repo root) on the primary metric and exits
+non-zero when the fresh value regressed by more than `threshold`
+(default 20%) in the metric's bad direction. Both files must pass the
+envelope check and at least one must declare `primary_metric` (the fresh
+one wins when both do). The nightly CI job runs this for
+`BENCH_shard_ownership.json` and `BENCH_strategy_overlap.json`.
 
 Run directly (exits non-zero listing violations) or through
 scripts/check.sh / `.github/workflows/ci.yml`.
 """
 from __future__ import annotations
 
+import argparse
 import json
+import math
 import pathlib
 import sys
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 ENVELOPE = {"name": str, "config": dict, "results": dict}
+
+
+def resolve_path(data: dict, dotted: str):
+    """Walk `dotted` ("results.sweep.0.x") through dicts and lists;
+    returns the value or raises KeyError with the failing component."""
+    node = data
+    for comp in dotted.split("."):
+        if isinstance(node, list):
+            try:
+                node = node[int(comp)]
+            except (ValueError, IndexError):
+                raise KeyError(comp) from None
+        elif isinstance(node, dict) and comp in node:
+            node = node[comp]
+        else:
+            raise KeyError(comp)
+    return node
 
 
 def check_file(path: pathlib.Path) -> list:
@@ -43,6 +84,26 @@ def check_file(path: pathlib.Path) -> list:
         errors.append(f"{path.name}: 'name' must be non-empty")
     if isinstance(data.get("results"), dict) and not data["results"]:
         errors.append(f"{path.name}: 'results' must be non-empty")
+    pm = data.get("primary_metric")
+    if pm is not None:
+        if not (isinstance(pm, dict) and isinstance(pm.get("path"), str)
+                and isinstance(pm.get("higher_is_better"), bool)):
+            errors.append(
+                f"{path.name}: 'primary_metric' must be "
+                "{path: str, higher_is_better: bool}")
+        else:
+            try:
+                val = resolve_path(data, pm["path"])
+            except KeyError as e:
+                errors.append(f"{path.name}: primary_metric path "
+                              f"{pm['path']!r} does not resolve "
+                              f"(missing {e})")
+            else:
+                if not isinstance(val, (int, float)) or \
+                        isinstance(val, bool):
+                    errors.append(
+                        f"{path.name}: primary_metric {pm['path']!r} must "
+                        f"be a number, got {type(val).__name__}")
     return errors
 
 
@@ -53,7 +114,74 @@ def check(root: pathlib.Path = ROOT) -> list:
     return [e for p in paths for e in check_file(p)]
 
 
-def main() -> int:
+def compare(fresh_path: pathlib.Path, baseline_path: pathlib.Path,
+            threshold: float = 0.2) -> list:
+    """Regression check on the primary metric; returns error strings."""
+    if fresh_path.resolve() == baseline_path.resolve():
+        # benchmarks write to cwd: rerunning one at the repo root
+        # overwrites the committed baseline in place, and a self-compare
+        # would vacuously pass — run the fresh bench in another directory
+        return [f"{fresh_path.name}: fresh and baseline are the SAME file "
+                f"({fresh_path.resolve()}); a self-compare cannot gate "
+                "anything"]
+    errors = check_file(fresh_path) + check_file(baseline_path)
+    if errors:
+        return errors
+    fresh = json.loads(fresh_path.read_text())
+    baseline = json.loads(baseline_path.read_text())
+    pm = fresh.get("primary_metric") or baseline.get("primary_metric")
+    if pm is None:
+        return [f"{fresh_path.name}: neither fresh nor baseline declares "
+                "'primary_metric' — nothing to gate on"]
+    try:
+        new = float(resolve_path(fresh, pm["path"]))
+        old = float(resolve_path(baseline, pm["path"]))
+    except KeyError as e:
+        return [f"primary_metric path {pm['path']!r} missing component "
+                f"{e} in one of {fresh_path.name} / {baseline_path.name}"]
+    hib = pm["higher_is_better"]
+    if old == 0:
+        # sign must follow the direction of movement, or a drop from a
+        # zero baseline would read as +inf and pass a higher-is-better gate
+        change = 0.0 if new == old else math.copysign(float("inf"),
+                                                      new - old)
+    else:
+        change = (new - old) / abs(old)
+    regressed = change < -threshold if hib else change > threshold
+    direction = "higher" if hib else "lower"
+    print(f"{fresh_path.name}: {pm['path']} baseline={old:.6g} "
+          f"fresh={new:.6g} change={change * 100:+.2f}% "
+          f"({direction} is better, threshold ±{threshold * 100:.0f}%)")
+    if regressed:
+        return [f"{fresh_path.name}: primary metric {pm['path']!r} "
+                f"regressed {change * 100:+.2f}% vs {baseline_path.name} "
+                f"(allowed: {threshold * 100:.0f}%)"]
+    return []
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--compare", nargs="+", metavar=("FRESH", "BASELINE"),
+                    help="regression-gate FRESH against BASELINE (default "
+                         "baseline: the same filename in the repo root)")
+    ap.add_argument("--threshold", type=float, default=0.2,
+                    help="allowed fractional regression of the primary "
+                         "metric (default 0.2 = 20%%)")
+    args = ap.parse_args(argv)
+
+    if args.compare:
+        if len(args.compare) > 2:
+            ap.error("--compare takes FRESH and at most one BASELINE")
+        fresh = pathlib.Path(args.compare[0])
+        baseline = pathlib.Path(args.compare[1]) if len(args.compare) == 2 \
+            else ROOT / fresh.name
+        errors = compare(fresh, baseline, threshold=args.threshold)
+        for e in errors:
+            print(f"BENCH COMPARE: {e}", file=sys.stderr)
+        if not errors:
+            print(f"bench regression gate OK ({fresh.name})")
+        return 1 if errors else 0
+
     errors = check()
     for e in errors:
         print(f"BENCH CHECK: {e}", file=sys.stderr)

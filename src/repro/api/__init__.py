@@ -15,6 +15,22 @@ from repro.api.engine import (
     hot_ids_from_corpus,
     put_batch,
 )
+from repro.api.strategies import (
+    AllGatherStrategy,
+    AllToAllStrategy,
+    CompressedReduceStrategy,
+    DistributionStrategy,
+    HierarchicalA2AStrategy,
+    OverlapA2AStrategy,
+    PsumScatterStrategy,
+    StrategyContext,
+    TopKReduceStrategy,
+    WireBytes,
+    get_strategy,
+    list_strategies,
+    register_strategy,
+)
+from repro.core.dpmr import DPMRState, StepFns, init_state, make_step_fns
 from repro.data import (
     Cursor,
     DataSource,
@@ -24,27 +40,14 @@ from repro.data import (
     register_source,
     write_file_corpus,
 )
-from repro.api.strategies import (
-    AllGatherStrategy,
-    AllToAllStrategy,
-    CompressedReduceStrategy,
-    DistributionStrategy,
-    HierarchicalA2AStrategy,
-    PsumScatterStrategy,
-    StrategyContext,
-    WireBytes,
-    get_strategy,
-    list_strategies,
-    register_strategy,
-)
-from repro.core.dpmr import DPMRState, StepFns, init_state, make_step_fns
 
 __all__ = [
     "AllGatherStrategy", "AllToAllStrategy", "CompressedReduceStrategy",
     "Cursor", "DPMREngine", "DPMRState", "DataSource",
-    "DistributionStrategy", "HierarchicalA2AStrategy", "PsumScatterStrategy",
-    "ShardedLoader", "StepFns", "StrategyContext", "WireBytes", "get_source",
-    "get_strategy", "hot_ids_from_corpus", "init_state", "list_sources",
-    "list_strategies", "make_step_fns", "put_batch", "register_source",
-    "register_strategy", "write_file_corpus",
+    "DistributionStrategy", "HierarchicalA2AStrategy", "OverlapA2AStrategy",
+    "PsumScatterStrategy", "ShardedLoader", "StepFns", "StrategyContext",
+    "TopKReduceStrategy", "WireBytes", "get_source", "get_strategy",
+    "hot_ids_from_corpus", "init_state", "list_sources", "list_strategies",
+    "make_step_fns", "put_batch", "register_source", "register_strategy",
+    "write_file_corpus",
 ]

@@ -334,6 +334,7 @@ class DPMREngine:
         step = int(self.state.step)
         extra = {"kind": "dpmr_sparse",
                  "distribution": self.cfg.distribution,
+                 "topk_frac": self.cfg.topk_frac,
                  "optimizer": self.cfg.optimizer,
                  "num_features": self.cfg.num_features}
         if loader is not None:
@@ -367,6 +368,18 @@ class DPMREngine:
                 f"but this engine uses {self.cfg.distribution!r}; the "
                 "persistent strategy carry (DPMRState.strat) may be "
                 "meaningless or mis-shaped for the new strategy",
+                RuntimeWarning, stacklevel=2)
+        saved_frac = manifest.get("extra", {}).get("topk_frac")
+        if (self.cfg.distribution == "topk_reduce"
+                and saved_dist == "topk_reduce"
+                and saved_frac is not None
+                and saved_frac != self.cfg.topk_frac):
+            warnings.warn(
+                f"checkpoint carries a topk_reduce residual accumulated at "
+                f"topk_frac={saved_frac} but this engine sparsifies at "
+                f"{self.cfg.topk_frac}; training stays correct (error "
+                "feedback re-injects it) but the first steps flush a "
+                "residual sized for the old k",
                 RuntimeWarning, stacklevel=2)
         if loader is not None:
             self._loader = loader      # attach even for cursor-less ckpts,

@@ -41,12 +41,23 @@ Pi = inner shards, cap = a2a capacity, |F|/P = block rows per device):
                    error feedback carried in `DPMRState.strat` and
                    persisted by engine save()/restore(). ~4x fewer reduce
                    bytes than psum_scatter at f32.
+  topk_reduce      sparse a2a forward; the reverse shuffle sends only the
+                   k = ceil(topk_frac*cap) largest-|g| slots per
+                   destination as (value, id) pairs, the rest feed a
+                   per-device error-feedback residual in `DPMRState.strat`.
+                   Reduce bytes drop cap -> 2k on both tiers.
+  overlap_a2a      a2a with every exchange split into micro-chunk
+                   collectives XLA can dispatch asynchronously and overlap
+                   with the step's compute. Bit-identical to a2a; same
+                   wire bytes.
 
 All exact strategies produce identical parameters when capacity does not
-overflow (tested in tests/test_dpmr.py); `compressed_reduce` tracks them to
-within quantization error (convergence parity is benchmarked in
-benchmarks/strategy_hierarchy.py). They differ in wire bytes per tier and
-in how capacity-overflowed features degrade.
+overflow (tested in tests/test_dpmr.py) — `overlap_a2a` bit-identically so;
+`compressed_reduce` / `topk_reduce` track them to within quantization /
+sparsification error (convergence parity is benchmarked in
+benchmarks/strategy_hierarchy.py and benchmarks/strategy_overlap.py). They
+differ in wire bytes per tier and in how capacity-overflowed features
+degrade.
 
 Third parties extend the seam with either
 
@@ -108,6 +119,10 @@ class StrategyContext(NamedTuple):
     inner_axes: Tuple[str, ...] = ()   # fast tier (ICI); () = all of `axes`
     outer_axes: Tuple[str, ...] = ()   # slow tier (DCN); () = single tier
     outer_shards: int = 1    # Po = product of outer axis sizes
+    topk_frac: float = 0.25  # topk_reduce: kept fraction of the capacity
+    #                          slots (k = ceil(topk_frac * capacity));
+    #                          threaded from DPMRConfig.topk_frac by
+    #                          core.dpmr.make_strategy_context
 
     @property
     def inner_shards(self) -> int:
@@ -154,14 +169,41 @@ def _owner_base(ctx: StrategyContext) -> jax.Array:
     return jax.lax.axis_index(ctx.axes) * ctx.block_size
 
 
-def _sparse_distribute(ctx, cold_loc, cold_ids):
-    """The paper's Algorithm 4: request shuffle + owner lookup + response."""
+def _chunked_all_to_all(x: jax.Array, axes, num_chunks: int) -> jax.Array:
+    """`jax.lax.all_to_all(x, axes, 0, 0, tiled=True)` split into micro
+    collectives over the capacity axis (axis 1).
+
+    Every (destination-row, capacity-slot) element is routed exactly as the
+    monolithic exchange routes it, so the result is bit-identical; what
+    changes is the lowering — `num_chunks` independent all-to-alls whose
+    async start/done pairs XLA's latency-hiding scheduler can dispatch
+    early and overlap with the compute between them, instead of one bulk
+    transfer serializing the step.
+    """
+    cap = x.shape[1]
+    n = max(1, min(num_chunks, cap))
+    if n == 1:
+        return jax.lax.all_to_all(x, axes, 0, 0, tiled=True)
+    bounds = [cap * i // n for i in range(n + 1)]
+    parts = [jax.lax.all_to_all(x[:, lo:hi], axes, 0, 0, tiled=True)
+             for lo, hi in zip(bounds, bounds[1:]) if hi > lo]
+    return jnp.concatenate(parts, axis=1)
+
+
+def _sparse_distribute(ctx, cold_loc, cold_ids, a2a_fn=None):
+    """The paper's Algorithm 4: request shuffle + owner lookup + response.
+
+    `a2a_fn(x)` is the exchange primitive for the two (P, cap) buffers —
+    the monolithic tiled all_to_all by default; overlap-aware strategies
+    substitute a micro-chunked equivalent."""
+    if a2a_fn is None:
+        a2a_fn = lambda x: jax.lax.all_to_all(  # noqa: E731
+            x, ctx.axes, 0, 0, tiled=True)
     routing = sparse.route_build(cold_ids, ctx.num_shards, ctx.block_size,
                                  ctx.capacity)
-    req_recv = jax.lax.all_to_all(routing.req_ids, ctx.axes, 0, 0,
-                                  tiled=True)
+    req_recv = a2a_fn(routing.req_ids)
     resp = sparse.owner_apply(req_recv, cold_loc, _owner_base(ctx))
-    resp_back = jax.lax.all_to_all(resp, ctx.axes, 0, 0, tiled=True)
+    resp_back = a2a_fn(resp)
     theta_cold = sparse.route_return(routing, resp_back)
     return theta_cold, {"routing": routing, "req_recv": req_recv,
                         "cold_ids": cold_ids, "overflow": routing.overflow}
@@ -377,7 +419,10 @@ class CompressedReduceStrategy(DistributionStrategy):
 
     The carry is per-device and |F|-sized — the engine persists it in
     `DPMRState.strat` and it rides through save()/restore() so a resumed
-    run continues bit-identically.
+    run continues bit-identically. On the full-batch accumulation path
+    the engine freezes the carry (`fwd["accumulate"]`), so the reduce
+    falls back to the exact dense path there — quantizing against a
+    frozen residual would re-inject it once per accumulated batch.
     """
 
     name = "compressed_reduce"
@@ -393,6 +438,14 @@ class CompressedReduceStrategy(DistributionStrategy):
         return -(-ctx.block_size // qb) * qb
 
     def reduce(self, ctx, cold_loc, grads_flat, fwd):
+        if fwd.get("accumulate", False):
+            # full-batch accumulation path (engine grad_step): the carry
+            # is frozen there, so quantizing against it would re-inject a
+            # restored residual once per accumulated batch instead of
+            # once. Use the exact dense reduce and leave the residual
+            # untouched (same discipline as topk_reduce).
+            return (_dense_reduce(ctx, cold_loc, grads_flat,
+                                  fwd["cold_ids"]), fwd["carry"])
         p = ctx.num_shards
         block = ctx.block_size
         qb = compression.BLOCK
@@ -423,6 +476,140 @@ class CompressedReduceStrategy(DistributionStrategy):
         inner = 2 * pi * ctx.capacity * 4 + pi * per_peer
         outer = 2 * po_cross * ctx.capacity * 4 + po_cross * per_peer
         return WireBytes(inner=inner, outer=outer)
+
+
+class TopKReduceStrategy(DistributionStrategy):
+    """Sparse forward + top-k sparsified reverse shuffle with per-device
+    error feedback (gradient sparsification on the strategy seam).
+
+    Forward is the paper's shuffle unchanged. On the reduce side each
+    device combines its per-feature gradient sums into the (P, cap) send
+    buffer, compensates every slot with the carried residual of that slot's
+    FEATURE (`carry[feature_id]`), and then sends, per destination owner,
+    only the k = ceil(topk_frac * cap) largest-magnitude slots — as (value
+    f32, global id int32) pairs, so the wire carries k·P pairs instead of
+    cap·P f32 slots. Owners scatter-add the received pairs exactly like
+    `a2a` does. Slots that lost the top-k race bank their compensated
+    gradient in the residual (`new_carry[feature] = compensated`); selected
+    slots reset theirs to zero — EF-SGD lineage, so dropped coordinates are
+    re-injected when the feature next appears and SGD/Adagrad convergence
+    tracks the exact strategies (benchmarks/strategy_overlap.py sweeps
+    loss-vs-k).
+
+    The carry is per-device and |F|-sized, lives in `DPMRState.strat`,
+    rides through `engine.save()`/`restore()` bit-exactly, and is reset to
+    zeros by `runtime/elastic.py` resharding (a residual is per-device
+    state, meaningless under a different shard count). `topk_frac=1.0`
+    keeps every slot and the residual stays identically zero.
+
+    Error feedback is only sound where the carry ADVANCES — the per-step
+    train_step path. On the full-batch accumulation path the engine
+    freezes the carry (`fwd["accumulate"]`, see `core.dpmr`), so this
+    strategy detects it and runs the exact a2a reverse shuffle instead:
+    fit() gets exact epoch gradients, fit_sgd() gets the sparsified wire.
+    """
+
+    name = "topk_reduce"
+
+    def distribute(self, ctx, cold_loc, cold_ids):
+        return _sparse_distribute(ctx, cold_loc, cold_ids)
+
+    def init_carry(self, ctx):
+        return jnp.zeros((ctx.num_shards * ctx.block_size,), jnp.float32)
+
+    def _k(self, ctx) -> int:
+        return compression.topk_count(ctx.capacity, ctx.topk_frac)
+
+    def reduce(self, ctx, cold_loc, grads_flat, fwd):
+        if fwd.get("accumulate", False):
+            # full-batch accumulation path (engine grad_step): the carry
+            # is frozen there — many grad_steps feed ONE update — so
+            # sparsifying would permanently drop (1 - k/cap) of the epoch
+            # gradient and re-inject any restored residual once per
+            # accumulated batch instead of once. Fall back to the exact
+            # reverse shuffle and leave the carry untouched; the top-k
+            # wire savings apply to the per-step (SGD) path only.
+            send = sparse.combine_grads(fwd["routing"], grads_flat)
+            recv = jax.lax.all_to_all(send, ctx.axes, 0, 0, tiled=True)
+            grad = sparse.owner_accumulate(fwd["req_recv"], recv,
+                                           jnp.zeros_like(cold_loc),
+                                           _owner_base(ctx))
+            return grad, fwd["carry"]
+        f = ctx.num_shards * ctx.block_size
+        k = self._k(ctx)
+        send = sparse.combine_grads(fwd["routing"], grads_flat)  # (P, cap)
+        ids = fwd["routing"].req_ids                             # (P, cap)
+        valid = ids >= 0
+        # error feedback: every live slot is compensated with the residual
+        # its feature banked the last time it lost the top-k race
+        comp = jnp.where(valid,
+                         send + fwd["carry"][jnp.clip(ids, 0, f - 1)], 0.0)
+        # per destination row, keep the k largest-|comp| live slots; dead
+        # slots rank below every live one so they are picked only when a
+        # row has fewer than k live slots (their id -1 no-ops at the owner)
+        key = jnp.where(valid, jnp.abs(comp), -1.0)
+        top_idx, top_mask = compression.topk_select(key, k)      # (P, k)
+        ids_k = jnp.take_along_axis(ids, top_idx, axis=1)
+        vals_k = jnp.where(ids_k >= 0,
+                           jnp.take_along_axis(comp, top_idx, axis=1), 0.0)
+        sel = top_mask & valid                                   # (P, cap)
+        # residual update: selected features flushed to zero, losers bank
+        # their compensated slot (feature ids are unique per device, so a
+        # plain scatter-set is race-free; absent features keep theirs)
+        new_carry = fwd["carry"].at[
+            jnp.where(valid, ids, f).reshape(-1)
+        ].set(jnp.where(sel, 0.0, comp).reshape(-1), mode="drop")
+        v_recv = jax.lax.all_to_all(vals_k, ctx.axes, 0, 0, tiled=True)
+        i_recv = jax.lax.all_to_all(ids_k, ctx.axes, 0, 0, tiled=True)
+        grad = sparse.owner_accumulate(i_recv, v_recv,
+                                       jnp.zeros_like(cold_loc),
+                                       _owner_base(ctx))
+        return grad, new_carry
+
+    def bytes_per_device(self, ctx):
+        # forward: the 2 (P, cap) f32 request/response buffers of a2a;
+        # reduce: k of cap slots per peer, each an (f32 value, int32 id)
+        # pair — the k/cap reduction lands on BOTH tiers
+        pi = ctx.inner_shards
+        po_cross = ctx.num_shards - pi
+        k = self._k(ctx)
+        inner = 2 * pi * ctx.capacity * 4 + pi * k * 8
+        outer = 2 * po_cross * ctx.capacity * 4 + po_cross * k * 8
+        return WireBytes(inner=inner, outer=outer)
+
+
+class OverlapA2AStrategy(AllToAllStrategy):
+    """Overlap-aware `a2a`: the same exchanges, lowered as micro-chunks.
+
+    Every (P, cap) all-to-all of the paper's shuffle is split into
+    `num_chunks` independent collectives over capacity-slot ranges
+    (`_chunked_all_to_all`). Element routing is untouched, so parameters
+    and gradients are BIT-IDENTICAL to `a2a` on any mesh — only the
+    schedule differs: XLA lowers each micro-chunk to its own async
+    start/done pair, letting the latency-hiding scheduler dispatch the
+    next chunk (and the reverse shuffle of already-landed gradient
+    chunks) while the inference matmul of the step still runs, instead of
+    serializing one bulk transfer against the compute. Wire bytes equal
+    `a2a` (inherited model); what the strategy buys is overlap, measured
+    by benchmarks/strategy_overlap.py.
+    """
+
+    name = "overlap_a2a"
+    num_chunks = 4      # micro-chunks per exchange; capacity-bounded
+
+    def _a2a(self, ctx, x):
+        return _chunked_all_to_all(x, ctx.axes, self.num_chunks)
+
+    def distribute(self, ctx, cold_loc, cold_ids):
+        return _sparse_distribute(ctx, cold_loc, cold_ids,
+                                  a2a_fn=lambda x: self._a2a(ctx, x))
+
+    def reduce(self, ctx, cold_loc, grads_flat, fwd):
+        send = sparse.combine_grads(fwd["routing"], grads_flat)
+        recv = self._a2a(ctx, send)
+        return sparse.owner_accumulate(fwd["req_recv"], recv,
+                                       jnp.zeros_like(cold_loc),
+                                       _owner_base(ctx))
 
 
 _REGISTRY: Dict[str, DistributionStrategy] = {}
@@ -468,3 +655,5 @@ register_strategy("allgather", AllGatherStrategy())
 register_strategy("psum_scatter", PsumScatterStrategy())
 register_strategy("hier_a2a", HierarchicalA2AStrategy())
 register_strategy("compressed_reduce", CompressedReduceStrategy())
+register_strategy("topk_reduce", TopKReduceStrategy())
+register_strategy("overlap_a2a", OverlapA2AStrategy())

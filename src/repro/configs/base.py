@@ -192,7 +192,14 @@ class DPMRConfig:
     distribution: str = "a2a"        # any name in the repro.api strategy
     #                                  registry (a2a | allgather |
     #                                  psum_scatter | hier_a2a |
-    #                                  compressed_reduce | user-registered)
+    #                                  compressed_reduce | topk_reduce |
+    #                                  overlap_a2a | user-registered)
+    topk_frac: float = 0.25          # topk_reduce: fraction of the per-
+    #                                  destination capacity slots whose
+    #                                  largest-|g| gradients go on the wire
+    #                                  (k = ceil(topk_frac * cap)); the rest
+    #                                  feed the error-feedback residual.
+    #                                  1.0 degenerates to the full shuffle.
     grad_scale: str = "mean"         # mean | sum (paper: sum, full-batch GD)
     optimizer: str = "sgd"           # any name in optim.SPARSE_OPTIMIZERS
     #                                  (sgd = the paper's GD; adagrad /

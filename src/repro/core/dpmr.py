@@ -22,7 +22,8 @@ exactly the paper's HDFS co-location):
 The distributeParameters / gradient-reduce collectives are pluggable
 `DistributionStrategy` objects looked up by name from `repro.api.strategies`
 (cfg.distribution: "a2a" | "allgather" | "psum_scatter" | "hier_a2a" |
-"compressed_reduce" | anything third parties register). Strategies see the
+"compressed_reduce" | "topk_reduce" | "overlap_a2a" | anything third
+parties register). Strategies see the
 mesh's wire tiers — `launch.mesh.tier_axes` factors the axes into the
 DCN-crossing outer tier (`pod`) and the ICI inner tier, carried on the
 `StrategyContext` — and may keep persistent per-device state (`init_carry`,
@@ -105,7 +106,7 @@ def make_strategy_context(cfg: DPMRConfig, mesh, cap: int = 0):
     return StrategyContext(axes=_axes(mesh), num_shards=p,
                            block_size=padded_features(cfg, mesh) // p,
                            capacity=cap, inner_axes=inner, outer_axes=outer,
-                           outer_shards=po)
+                           outer_shards=po, topk_frac=cfg.topk_frac)
 
 
 def strategy_carry_len(cfg: DPMRConfig, mesh) -> int:
@@ -176,16 +177,23 @@ def _device_fwd(cfg, strategy, ctx, kernel_impl,
 
 
 def _device_grads(cfg, strategy, ctx, kernel_impl,
-                  cold_loc, grads_slot, fwd, aux, strat_loc, stateful):
+                  cold_loc, grads_slot, fwd, aux, strat_loc, stateful,
+                  accumulating=False):
     """Reduce stages: per-feature sums delivered to owners + hot psum.
 
     `strat_loc` is this device's slice of the persistent strategy carry;
     stateful strategies receive it as `fwd["carry"]` and return the
-    updated value alongside the gradient."""
+    updated value alongside the gradient. `accumulating=True` marks the
+    full-batch grad_step path, where the engine DISCARDS the returned
+    carry (many grad_steps feed one update) — it reaches the strategy as
+    `fwd["accumulate"]` so lossy strategies whose correctness depends on
+    the carry advancing (e.g. topk_reduce) can fall back to an exact
+    reduce there."""
     gflat = grads_slot.reshape(-1)
     if stateful:
         grad_cold, strat_new = strategy.reduce(
-            ctx, cold_loc, gflat, {**fwd, "carry": strat_loc})
+            ctx, cold_loc, gflat,
+            {**fwd, "carry": strat_loc, "accumulate": accumulating})
     else:
         grad_cold = strategy.reduce(ctx, cold_loc, gflat, fwd)
         strat_new = strat_loc
@@ -257,7 +265,8 @@ def make_step_fns(cfg: DPMRConfig, mesh, batch_size: int,
     stateful = strategy.init_carry(ctx) is not None
     sched = make_schedule(cfg)
 
-    def _fwd_grads(cold_loc, hot, hot_ids, strat_loc, ids, vals, labels):
+    def _fwd_grads(cold_loc, hot, hot_ids, strat_loc, ids, vals, labels,
+                   accumulating=False):
         theta, fwd, aux = _device_fwd(
             cfg, strategy, ctx, kernel_impl,
             cold_loc, hot, hot_ids, ids, vals)
@@ -267,7 +276,8 @@ def make_step_fns(cfg: DPMRConfig, mesh, batch_size: int,
             grads_slot = grads_slot / float(batch_size)
         grad_cold, grad_hot, strat_new = _device_grads(
             cfg, strategy, ctx, kernel_impl,
-            cold_loc, grads_slot, fwd, aux, strat_loc, stateful)
+            cold_loc, grads_slot, fwd, aux, strat_loc, stateful,
+            accumulating=accumulating)
         return grad_cold, grad_hot, strat_new, _metrics(
             axes, probs, labels, nll, aux["overflow"])
 
@@ -285,9 +295,12 @@ def make_step_fns(cfg: DPMRConfig, mesh, batch_size: int,
         # the carry is read-only here: full-batch fit() accumulates raw
         # gradients across many grad_steps before one update, so per-batch
         # carry mutation would double-count; error feedback advances
-        # through train_step (the SGD path) only
+        # through train_step (the SGD path) only. accumulating=True tells
+        # the strategy (fwd["accumulate"]) so ones that MUST advance the
+        # carry to stay correct can take an exact path instead.
         grad_cold, grad_hot, _, m = _fwd_grads(
-            cold_loc, hot, hot_ids, strat_loc, ids, vals, labels)
+            cold_loc, hot, hot_ids, strat_loc, ids, vals, labels,
+            accumulating=True)
         return grad_cold, grad_hot, m
 
     def predict_dev(cold_loc, hot, hot_ids, ids, vals):

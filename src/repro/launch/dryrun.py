@@ -96,7 +96,8 @@ def run_strategy_wire(global_batch: int = 1 << 24, k: int = 64,
         cap = dpmr.capacity_for_shards(cfg, global_batch // p, p)
         ctx = StrategyContext(axes=(), num_shards=p,
                               block_size=-(-feature_space // p),
-                              capacity=cap, outer_shards=po)
+                              capacity=cap, outer_shards=po,
+                              topk_frac=cfg.topk_frac)
         for name in list_strategies():
             wb = get_strategy(name).bytes_per_device(ctx)
             rows.append({"mesh": mesh_kind, "strategy": name,

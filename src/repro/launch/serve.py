@@ -10,10 +10,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import compat
+from repro.configs.base import ParallelConfig, TrainConfig
 from repro.launch.mesh import make_host_mesh
 from repro.models import registry
 from repro.train import serve, trainer
-from repro.configs.base import ParallelConfig, TrainConfig
 
 log = logging.getLogger("repro.serve")
 

@@ -8,8 +8,9 @@ straggler watchdog, and resume (model + optimizer + exact data position).
 `--sparse` drives the paper's sparse face instead (DPMREngine over a
 zipf_sparse loader); `--strategy` selects any registered distribution
 strategy (a2a | allgather | psum_scatter | hier_a2a | compressed_reduce |
-user-registered) and engine save()/restore() carries the model, the
-strategy carry (e.g. compression error feedback), and the data cursor.
+topk_reduce | overlap_a2a | user-registered) and engine save()/restore()
+carries the model, the strategy carry (compression error feedback /
+top-k sparsification residual), and the data cursor.
 
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch granite-8b --smoke \

@@ -16,9 +16,15 @@ the same `quantize`/`dequantize` primitives and carries its error feedback
 in `DPMRState.strat`. Wire-bytes drop 4x (f32->int8); error feedback keeps
 SGD/Adam convergence (validated against uncompressed training in
 tests/test_multidevice.py and benchmarks/strategy_hierarchy.py).
+
+The top-k selection helpers (`topk_count`, `topk_select`, `topk_mask`)
+live here too: the `topk_reduce` strategy builds its sparsified reverse
+shuffle — and its wire model's k — out of exactly these primitives, with
+the same error-feedback discipline as the quantizer above.
 """
 from __future__ import annotations
 
+import math
 from typing import Tuple
 
 import jax
@@ -46,6 +52,35 @@ def _dequantize(q: jax.Array, scale: jax.Array, n: int) -> jax.Array:
 # builds its wire format out of exactly these primitives
 quantize = _quantize
 dequantize = _dequantize
+
+
+def topk_count(n: int, frac: float) -> int:
+    """k for a top-`frac` selection out of `n` slots: ceil(frac * n),
+    clamped to [1, n]. Shared by the topk_reduce strategy's reduce path and
+    its `bytes_per_device` wire model so the two can never disagree."""
+    return int(min(n, max(1, math.ceil(frac * n))))
+
+
+def topk_select(x: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+    """Top-k selection along the last axis: `(indices, mask)` of the k
+    largest entries per row (ties broken by position, exactly
+    `jax.lax.top_k`'s order). `x` is the selection key — pass magnitudes,
+    with invalid slots already pushed below every valid one. One top_k +
+    one O(rows * k) scatter; no (rows, k, n) intermediate. The
+    `topk_reduce` strategy gathers its wire payload with `indices` and
+    updates its error-feedback residual with `mask`, so send and residual
+    can never disagree about what was selected."""
+    n = x.shape[-1]
+    flat = x.reshape(-1, n)
+    idx = jax.lax.top_k(flat, k)[1]                    # (rows, k)
+    rows = jnp.arange(flat.shape[0])[:, None]
+    mask = jnp.zeros(flat.shape, jnp.bool_).at[rows, idx].set(True)
+    return (idx.reshape(x.shape[:-1] + (k,)), mask.reshape(x.shape))
+
+
+def topk_mask(x: jax.Array, k: int) -> jax.Array:
+    """The boolean-mask half of `topk_select` (exactly k True per row)."""
+    return topk_select(x, k)[1]
 
 
 def compress_psum(g: jax.Array, err: jax.Array, axis: str

@@ -47,10 +47,12 @@ def reshard_dpmr_state(state: dpmr.DPMRState, cfg: DPMRConfig, new_mesh
             x = x[:f_new]
         return x
 
-    # the strategy carry (e.g. compression error feedback) is per-DEVICE
-    # state, meaningless under a different shard count — reset to zeros of
-    # the new mesh's geometry (safe: it is an optimization residual, not
-    # model state; the next steps rebuild it)
+    # the strategy carry (compressed_reduce's quantization error feedback,
+    # topk_reduce's sparsification residual) is per-DEVICE state,
+    # meaningless under a different shard count — reset to zeros of the new
+    # mesh's geometry (safe: it is an optimization residual, not model
+    # state; the next steps rebuild it). strategy_carry_len resolves the
+    # new per-device length through the strategy's own init_carry.
     p_new = dpmr.num_shards(new_mesh)
     strat = jnp.zeros((p_new * dpmr.strategy_carry_len(cfg, new_mesh),),
                       jnp.float32)

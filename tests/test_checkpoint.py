@@ -111,6 +111,7 @@ def test_straggler_watchdog_flags_outlier():
 def test_elastic_restore_under_new_sharding(tmp_path):
     """Save replicated, restore sharded (mesh change) — values identical."""
     from jax.sharding import NamedSharding, PartitionSpec as P
+
     from repro.launch.mesh import make_host_mesh
 
     ck = Checkpointer(str(tmp_path))

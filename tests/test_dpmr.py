@@ -7,8 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.api import (DPMREngine, DistributionStrategy, WireBytes,
-                       hot_ids_from_corpus, get_strategy, list_strategies,
+from repro.api import (DistributionStrategy, DPMREngine, WireBytes,
+                       get_strategy, hot_ids_from_corpus, list_strategies,
                        register_strategy)
 from repro.api.strategies import StrategyContext
 from repro.configs.base import DPMRConfig
@@ -20,8 +20,10 @@ F = 1 << 12
 SPEC = sparse_corpus.CorpusSpec(num_features=F, features_per_sample=16,
                                 signal_features=256, seed=0)
 # strategies that are EXACT (bit-identical parameters when nothing
-# overflows); compressed_reduce is quantized and tested for parity instead
-STRATEGIES = ("a2a", "allgather", "psum_scatter", "hier_a2a")
+# overflows); compressed_reduce / topk_reduce are lossy and tested for
+# parity instead
+STRATEGIES = ("a2a", "allgather", "psum_scatter", "hier_a2a",
+              "overlap_a2a")
 
 
 def _batches(batch_size, num_batches, start=0):
@@ -141,7 +143,8 @@ def test_capacity_model():
 
 
 @pytest.mark.parametrize("distribution", ["a2a", "psum_scatter",
-                                          "hier_a2a", "compressed_reduce"])
+                                          "hier_a2a", "compressed_reduce",
+                                          "topk_reduce", "overlap_a2a"])
 def test_overflow_metric_nonzero_at_tiny_capacity(distribution):
     """Sparse-forward strategies report dropped uniques through the
     `overflow` metric when cap_factor is forced tiny, and zero at the
@@ -385,6 +388,207 @@ def test_restore_warns_on_strategy_mismatch(tmp_path):
     other = DPMREngine(_cfg(distribution="psum_scatter"), mesh)
     with pytest.warns(RuntimeWarning, match="distribution"):
         other.restore(str(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# topk_reduce / overlap_a2a: sparsified & overlap-aware exchanges
+# ---------------------------------------------------------------------------
+
+
+def test_overlap_a2a_bit_identical_to_a2a():
+    """The micro-chunked exchange must change the SCHEDULE only: losses
+    and parameters equal a2a's bit for bit (no float-order tolerance)."""
+    mesh = make_host_mesh(1, 1)
+    batches = list(_batches(128, 4))
+    out = {}
+    for dist in ("a2a", "overlap_a2a"):
+        eng = DPMREngine(_cfg(distribution=dist), mesh)
+        hist = eng.fit_sgd(iter(batches))
+        out[dist] = (np.asarray(eng.state.cold),
+                     [h["loss"] for h in hist])
+    np.testing.assert_array_equal(out["a2a"][0], out["overlap_a2a"][0])
+    assert out["a2a"][1] == out["overlap_a2a"][1]
+
+
+def test_topk_frac_one_degenerates_to_a2a():
+    """topk_frac=1.0 keeps every slot: parameters match a2a and the
+    residual stays identically zero."""
+    mesh = make_host_mesh(1, 1)
+    batches = list(_batches(128, 3))
+    ref = DPMREngine(_cfg(distribution="a2a"), mesh)
+    ref.fit_sgd(iter(batches))
+    full = DPMREngine(_cfg(distribution="topk_reduce", topk_frac=1.0), mesh)
+    full.fit_sgd(iter(batches))
+    np.testing.assert_allclose(np.asarray(ref.state.cold),
+                               np.asarray(full.state.cold), atol=1e-6)
+    assert float(jnp.abs(full.state.strat).sum()) == 0.0
+
+
+def test_topk_error_feedback_state():
+    """At a sparsifying fraction the dropped slots bank a residual in
+    DPMRState.strat; it is per-device |F|-sized like compressed_reduce's."""
+    mesh = make_host_mesh(1, 1)
+    cfg = _cfg(distribution="topk_reduce", topk_frac=0.1)
+    eng = DPMREngine(cfg, mesh)
+    f = dpmr.padded_features(cfg, mesh)
+    assert eng.state.strat.shape == (f,)
+    assert float(jnp.abs(eng.state.strat).sum()) == 0.0
+    eng.train_step(sparse_corpus.make_batch(SPEC, 128, 0))
+    assert float(jnp.abs(eng.state.strat).sum()) > 0.0
+
+
+def test_topk_reduce_convergence_parity():
+    """Error feedback keeps topk_reduce within 1% of a2a's final loss on
+    the SGD run (the tighter 0.1%-at-default gate lives in
+    benchmarks/strategy_overlap.py)."""
+    mesh = make_host_mesh(1, 1)
+    final = {}
+    for dist in ("a2a", "topk_reduce"):
+        eng = DPMREngine(_cfg(distribution=dist, optimizer="adagrad",
+                              learning_rate=2.0, topk_frac=0.1), mesh)
+        hist = eng.fit_sgd(_batches(256, 40))
+        final[dist] = np.mean([h["loss"] for h in hist[-5:]])
+    rel = abs(final["topk_reduce"] - final["a2a"]) / final["a2a"]
+    assert rel < 0.01, final
+
+
+def test_stateful_strategies_exact_on_full_batch_fit():
+    """The fit() accumulation path freezes the carry (fwd["accumulate"]);
+    both lossy built-ins must fall back to their exact reduce there —
+    parameters match a2a (topk even at an aggressive fraction), and the
+    residual never accumulates (sparsifying/quantizing against a frozen
+    carry would drop gradient mass / re-inject a restored residual once
+    per accumulated batch)."""
+    mesh = make_host_mesh(1, 1)
+    batches = list(_batches(128, 3))
+    ref = DPMREngine(_cfg(distribution="a2a"), mesh)
+    ref.fit(lambda: iter(batches))
+    for dist in ("topk_reduce", "compressed_reduce"):
+        eng = DPMREngine(_cfg(distribution=dist, topk_frac=0.05), mesh)
+        eng.fit(lambda: iter(batches))
+        np.testing.assert_allclose(np.asarray(ref.state.cold),
+                                   np.asarray(eng.state.cold), atol=1e-5)
+        assert float(jnp.abs(eng.state.strat).sum()) == 0.0, dist
+
+
+def test_restored_carry_frozen_through_fit():
+    """A nonzero residual restored from an SGD run must ride through a
+    fit() epoch untouched (re-injected zero times, not once per batch)."""
+    mesh = make_host_mesh(1, 1)
+    batches = list(_batches(128, 4))
+    for dist in ("topk_reduce", "compressed_reduce"):
+        eng = DPMREngine(_cfg(distribution=dist, topk_frac=0.05), mesh)
+        eng.fit_sgd(iter(batches))            # builds a live residual
+        before = np.asarray(eng.state.strat).copy()
+        assert np.abs(before).sum() > 0.0, dist
+        eng.fit(lambda: iter(batches), iterations=1)
+        np.testing.assert_array_equal(before, np.asarray(eng.state.strat))
+
+
+def test_topk_carry_checkpoint_roundtrip(tmp_path):
+    """save()/restore() persists the sparsification residual bit-exactly:
+    a restored run continues identically to the uninterrupted one."""
+    mesh = make_host_mesh(1, 1)
+    cfg = _cfg(distribution="topk_reduce", topk_frac=0.1,
+               optimizer="adagrad", learning_rate=2.0)
+    batches = list(_batches(128, 6))
+
+    full = DPMREngine(cfg, mesh)
+    full.fit_sgd(iter(batches))
+
+    part = DPMREngine(cfg, mesh)
+    part.fit_sgd(iter(batches[:3]))
+    assert float(jnp.abs(part.state.strat).sum()) > 0.0
+    part.save(str(tmp_path))
+
+    resumed = DPMREngine(cfg, mesh)
+    resumed.restore(str(tmp_path))
+    np.testing.assert_array_equal(np.asarray(part.state.strat),
+                                  np.asarray(resumed.state.strat))
+    resumed.fit_sgd(iter(batches[3:]))
+    for a, b in zip(full.state, resumed.state):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_topk_carry_reset_on_elastic_reshard():
+    """Elastic resharding must zero the residual (per-device state is
+    meaningless under a new shard count) while keeping the parameters."""
+    from repro.runtime.elastic import reshard_dpmr_state
+
+    mesh = make_host_mesh(1, 1)
+    cfg = _cfg(distribution="topk_reduce", topk_frac=0.1)
+    eng = DPMREngine(cfg, mesh)
+    eng.fit_sgd(_batches(128, 3))
+    assert float(jnp.abs(eng.state.strat).sum()) > 0.0
+    new = reshard_dpmr_state(eng.state, cfg, mesh)
+    assert float(jnp.abs(new.strat).sum()) == 0.0
+    assert new.strat.shape == eng.state.strat.shape
+    np.testing.assert_array_equal(np.asarray(new.cold),
+                                  np.asarray(eng.state.cold))
+
+
+def test_restore_warns_on_topk_frac_mismatch(tmp_path):
+    """A topk_reduce residual accumulated at one sparsification level
+    restored under another must be called out."""
+    mesh = make_host_mesh(1, 1)
+    eng = DPMREngine(_cfg(distribution="topk_reduce", topk_frac=0.1), mesh)
+    eng.fit_sgd(_batches(128, 2))
+    eng.save(str(tmp_path))
+    other = DPMREngine(_cfg(distribution="topk_reduce", topk_frac=0.5),
+                       mesh)
+    with pytest.warns(RuntimeWarning, match="topk_frac"):
+        other.restore(str(tmp_path))
+
+
+def test_topk_selection_helpers_oracle():
+    """compression.topk_count / topk_mask against numpy ground truth."""
+    from repro.optim import compression
+
+    assert compression.topk_count(16, 0.25) == 4
+    assert compression.topk_count(16, 1e-9) == 1      # floor at 1
+    assert compression.topk_count(16, 1.0) == 16      # ceil at n
+    assert compression.topk_count(10, 0.25) == 3      # ceil, not round
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(5, 32)).astype(np.float32))
+    for k in (1, 7, 32):
+        idx, mask = compression.topk_select(x, k)
+        idx, mask = np.asarray(idx), np.asarray(mask)
+        assert idx.shape == (5, k)
+        assert mask.shape == x.shape and mask.sum(axis=1).tolist() == \
+            [k] * 5
+        np.testing.assert_array_equal(
+            mask, np.asarray(compression.topk_mask(x, k)))
+        for row, irow, mrow in zip(np.asarray(x), idx, mask):
+            top = set(sorted(row, reverse=True)[:k])
+            assert set(row[mrow]) == top == set(row[irow])
+
+
+def test_topk_and_overlap_wire_models():
+    """topk_reduce cuts the reduce leg cap -> 2k pairs on BOTH tiers;
+    overlap_a2a's bytes equal a2a's exactly (it buys schedule, not
+    volume); ctx.topk_frac is threaded from DPMRConfig through StepFns."""
+    from repro.optim import compression
+
+    p, po, cap, block = 512, 2, 2048, 1 << 21
+    for frac in (0.05, 0.25):
+        ctx = StrategyContext(axes=(), num_shards=p, block_size=block,
+                              capacity=cap, outer_shards=po,
+                              topk_frac=frac)
+        a2a = get_strategy("a2a").bytes_per_device(ctx)
+        topk = get_strategy("topk_reduce").bytes_per_device(ctx)
+        assert get_strategy("overlap_a2a").bytes_per_device(ctx) == a2a
+        k = compression.topk_count(cap, frac)
+        # forward legs match a2a's 2 buffers; reduce leg is k (val, id)
+        # pairs per peer on each tier
+        pi = ctx.inner_shards
+        assert topk.inner == 2 * pi * cap * 4 + pi * k * 8
+        assert topk.outer == 2 * (p - pi) * cap * 4 + (p - pi) * k * 8
+        assert topk.total < a2a.total
+
+    mesh = make_host_mesh(1, 1)
+    fns = DPMREngine(_cfg(distribution="topk_reduce", topk_frac=0.125),
+                     mesh).step_fns(128)
+    assert fns.ctx.topk_frac == 0.125
 
 
 # ---------------------------------------------------------------------------

@@ -131,6 +131,49 @@ print(json.dumps({
     assert out["comp_vs_a2a"] < 0.05, out       # quantized but tracking
 
 
+def test_overlap_and_topk_strategies_on_pod_mesh():
+    """(2,2,2) (pod,data,model) mesh: overlap_a2a's micro-chunked exchange
+    is BIT-IDENTICAL to flat a2a (same losses, same parameters — no
+    float-order tolerance: element routing is unchanged, only the
+    collective schedule differs), and topk_reduce at a sparsifying
+    fraction trains with a live error-feedback residual that tracks a2a."""
+    out = run_py(COMMON + """
+from repro.api import DPMREngine
+from repro.configs.base import DPMRConfig
+from repro.data import get_source
+
+src = get_source("zipf_sparse", batch_size=256, num_features=1<<12,
+                 features_per_sample=16, signal_features=256, seed=0)
+batches = list(src.iter_batches(limit=3))
+base = dict(num_features=1<<12, max_features_per_sample=16, iterations=2,
+            learning_rate=1.0, max_hot=32)
+mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
+out = {}
+state = {}
+for dist in ("a2a", "overlap_a2a"):
+    eng = DPMREngine(DPMRConfig(distribution=dist, **base), mesh)
+    hist = eng.fit_sgd(iter(batches))
+    out[f"losses_{dist}"] = [h["loss"] for h in hist]
+    state[dist] = eng
+topk = DPMREngine(DPMRConfig(distribution="topk_reduce", topk_frac=0.05,
+                             **base), mesh)
+topk.fit_sgd(iter(batches))
+a = np.asarray(state["a2a"].state.cold)
+print(json.dumps({
+    "overlap_bit_identical": bool(np.array_equal(
+        a, np.asarray(state["overlap_a2a"].state.cold))),
+    "losses_equal": out["losses_a2a"] == out["losses_overlap_a2a"],
+    "topk_carry_nonzero": bool(np.abs(np.asarray(
+        topk.state.strat)).sum() > 0),
+    "topk_vs_a2a": float(np.max(np.abs(
+        a - np.asarray(topk.state.cold))))}))
+""")
+    assert out["overlap_bit_identical"] is True, out
+    assert out["losses_equal"] is True, out
+    assert out["topk_carry_nonzero"] is True, out
+    assert out["topk_vs_a2a"] < 0.05, out       # sparsified but tracking
+
+
 def test_explicit_fsdp_linear_matches_matmul():
     """core.fsdp.dpmr_dense_linear (all_gather/psum_scatter staging) ==
     plain x @ W, forward AND backward."""
