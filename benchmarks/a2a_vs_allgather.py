@@ -6,9 +6,9 @@ registered strategy's own two-tier wire model.
 Per device per step (forward + reduce collectives both counted; the seed
 version of this table counted only allgather's forward table movement, so
 its ag/a2a ratios were ~2x smaller):
-  a2a:               3 * P * cap * 4 bytes     (independent of |F|!)
+  a2a:               3 * (P-1) * cap * 4 bytes (independent of |F|!)
   allgather:         ~ 2 * |F| * 4 bytes       (grows with the feature space)
-  psum_scatter:      2 * P * cap * 4 + |F| * 4 (sparse fwd, dense reduce)
+  psum_scatter:      2 * (P-1) * cap * 4 + |F| * 4 (sparse fwd, dense reduce)
   hier_a2a:          shuffle on ICI; DCN only carries 2 * (|F|/P) * (Po-1)
                      * 4 (pod mirror + per-pod partials)
   compressed_reduce: sparse fwd + the dense reduce at int8 (~4x fewer

@@ -30,7 +30,6 @@ from __future__ import annotations
 import glob
 import json
 import os
-from typing import Dict, Optional
 
 from repro.configs import SHAPES, get_config
 from repro.configs.base import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
@@ -72,7 +71,7 @@ def _slstm_correction(arch: str, shape_name: str, kind: str) -> float:
     return fwd * mult / CHIPS                        # per device
 
 
-def extrapolate(probe: Dict) -> Dict:
+def extrapolate(probe: dict) -> dict:
     """probe json -> per-device per-STEP costs."""
     p1, p2 = probe["probe1"], probe["probe2"]
     units = probe["units"]
@@ -97,7 +96,7 @@ def extrapolate(probe: Dict) -> Dict:
             "collective_bytes": colls}
 
 
-def roofline_terms(step: Dict) -> Dict:
+def roofline_terms(step: dict) -> dict:
     comp = step["flops"] / PEAK_FLOPS_BF16          # flops already per-device
     mem = step["hbm_bytes"] / HBM_BW
     coll = 0.0
@@ -175,7 +174,7 @@ def model_flops(arch: str, shape_name: str, kind: str) -> float:
     return 2.0 * n * toks
 
 
-def _analytic_row(arch: str, shape_name: str) -> Dict:
+def _analytic_row(arch: str, shape_name: str) -> dict:
     """Fallback for cells whose unrolled probe exceeds the compile budget
     (SSM prefill_32k: 256 unrolled SSD chunks). FLOPs from the chunked-SSD /
     mLSTM closed forms; collectives from the per-pass param-gather model.
@@ -222,7 +221,7 @@ def _analytic_row(arch: str, shape_name: str) -> Dict:
 
 def analyze(dryrun_dir: str = "results/dryrun",
             probe_dir: str = "results/probes",
-            out_path: Optional[str] = "results/roofline.json"):
+            out_path: str | None = "results/roofline.json"):
     rows = []
     for path in sorted(glob.glob(os.path.join(probe_dir, "*__probe.json"))):
         probe = json.load(open(path))

@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
 # Repo health check: bytecode-compiles the tree, runs the fast tier-1 tests,
-# and smokes the public API registries. ROADMAP.md references this as the
+# smokes the public API registries, and runs the jaxpr-level wire-model &
+# strategy-contract audit (repro.analysis). ROADMAP.md references this as the
 # pre-PR gate and .github/workflows/ci.yml runs it on every push/PR; run the
 # full (slow-inclusive) suite with
 #   PYTHONPATH=src python -m pytest -q
@@ -108,6 +109,41 @@ for h in range(2):
     assert sum(1 for _ in loader.epoch()) == 4
     assert src.read_stats['unique_chunks'] == 2, (h, src.read_stats)
 print('shard ownership OK: each host opened only its 2 of 4 chunks')
+"
+
+echo "== analysis: wire-model & strategy-contract audit (jaxpr-level) =="
+# the hard gate over the registry's WireBytes claims: traces every
+# strategy's collectives on single- and multi-pod analytic meshes, cross-
+# checks declared vs extracted bytes per tier, and audits the engine seam
+# (donation aliasing, carry reset, StepFns cache). The report is written
+# to AUDIT_report.json; CI uploads it as an artifact when this fails.
+t 600 python -m repro.analysis.audit --quiet --json AUDIT_report.json
+
+# negative control: a deliberately-miswired strategy (legacy self-chunk
+# counting) must FAIL the audit — proves the gate can actually reject
+t 300 python -c "
+from repro.analysis import audit_registry, build_contexts
+from repro.api.strategies import _REGISTRY, AllToAllStrategy, WireBytes, \
+    register_strategy
+
+class SelfCounting(AllToAllStrategy):
+    def bytes_per_device(self, ctx):
+        pi = ctx.inner_shards
+        return WireBytes(inner=3 * pi * ctx.capacity * 4,
+                         outer=3 * (ctx.num_shards - pi) * ctx.capacity * 4)
+
+register_strategy('_miswired_smoke', SelfCounting())
+try:
+    report = audit_registry(strategies=['_miswired_smoke'],
+                            contexts=build_contexts(production=False),
+                            engine_checks=False)
+finally:
+    _REGISTRY.pop('_miswired_smoke', None)
+assert not report['ok'], 'auditor accepted a deliberately-miswired strategy'
+assert any(f['rule'] == 'W-MATCH' for f in report['findings']), \
+    report['findings']
+print('negative control OK: miswired strategy rejected '
+      f'({report[\"num_findings\"]} findings)')
 "
 
 echo "== docs link-check (every docs/*.md code path exists) =="

@@ -117,6 +117,16 @@ def check(root: pathlib.Path = ROOT) -> list:
 def compare(fresh_path: pathlib.Path, baseline_path: pathlib.Path,
             threshold: float = 0.2) -> list:
     """Regression check on the primary metric; returns error strings."""
+    # explicit existence check first: a missing file would otherwise
+    # surface as an OSError dressed up as "unparseable JSON", which points
+    # the reader at the artifact's contents instead of its absence
+    missing = [f"{role} artifact not found: {p} — run the benchmark "
+               "first (baselines are committed at the repo root)"
+               for role, p in (("fresh", fresh_path),
+                               ("baseline", baseline_path))
+               if not p.is_file()]
+    if missing:
+        return missing
     if fresh_path.resolve() == baseline_path.resolve():
         # benchmarks write to cwd: rerunning one at the repo root
         # overwrites the committed baseline in place, and a self-compare
@@ -133,12 +143,16 @@ def compare(fresh_path: pathlib.Path, baseline_path: pathlib.Path,
     if pm is None:
         return [f"{fresh_path.name}: neither fresh nor baseline declares "
                 "'primary_metric' — nothing to gate on"]
-    try:
-        new = float(resolve_path(fresh, pm["path"]))
-        old = float(resolve_path(baseline, pm["path"]))
-    except KeyError as e:
-        return [f"primary_metric path {pm['path']!r} missing component "
-                f"{e} in one of {fresh_path.name} / {baseline_path.name}"]
+    vals = {}
+    for role, p, data in (("fresh", fresh_path, fresh),
+                          ("baseline", baseline_path, baseline)):
+        try:
+            vals[role] = float(resolve_path(data, pm["path"]))
+        except KeyError as e:
+            return [f"{p.name}: {role} artifact lacks primary_metric "
+                    f"path {pm['path']!r} (missing component {e}) — "
+                    "was it produced by an older benchmark version?"]
+    new, old = vals["fresh"], vals["baseline"]
     hib = pm["higher_is_better"]
     if old == 0:
         # sign must follow the direction of movement, or a drop from a

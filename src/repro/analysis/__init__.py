@@ -1,0 +1,48 @@
+"""Static analysis over the DPMR strategy registry and compiled steps.
+
+The paper's headline accounting is communication volume: every loop pays a
+parameter-assignment shuffle and a gradient reduce, and each registered
+`DistributionStrategy` justifies itself through a hand-written two-tier
+`WireBytes` model. This subsystem makes those claims *machine-checked*
+instead of trusted:
+
+  trace.py      traces a strategy's `distribute` / `reduce` (and the
+                engine's compiled `StepFns`) to jaxpr on ANALYTIC meshes —
+                no devices needed — and extracts every collective with its
+                axes, operand shapes, and dtypes.
+  wire.py       classifies each extracted collective's bytes-received-per-
+                device onto the ICI / DCN tiers of a `StrategyContext`.
+  contracts.py  the lint rules: wire-model cross-check, lossy-strategy
+                carry lifecycle, exact fallback on the accumulate path,
+                multi-pod outer-tier liveness, donation audit.
+  audit.py      `python -m repro.analysis.audit` — runs the rules over the
+                whole registry and emits a machine-readable report;
+                `scripts/check.sh` and CI run it as a hard gate.
+
+See docs/ANALYSIS.md for what each rule proves and how to read a report.
+"""
+from repro.analysis.audit import AuditContext, audit_registry, build_contexts
+from repro.analysis.contracts import Finding, check_strategy
+from repro.analysis.trace import (
+    Collective,
+    StrategyTrace,
+    collect_collectives,
+    trace_jaxpr,
+    trace_strategy,
+)
+from repro.analysis.wire import collective_wire, wire_total
+
+__all__ = [
+    "AuditContext",
+    "Collective",
+    "Finding",
+    "StrategyTrace",
+    "audit_registry",
+    "build_contexts",
+    "check_strategy",
+    "collect_collectives",
+    "collective_wire",
+    "trace_jaxpr",
+    "trace_strategy",
+    "wire_total",
+]

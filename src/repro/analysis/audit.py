@@ -1,0 +1,316 @@
+"""`python -m repro.analysis.audit` — prove the strategy registry's claims.
+
+For every registered strategy x every analytic context (single device,
+8-device pod, (2,4) multi-pod, the (2,16,16) production geometry) the audit
+traces `distribute`/`reduce` to jaxpr (no devices needed), attributes every
+extracted collective's bytes onto the ICI/DCN tiers, cross-checks the total
+against the declared `bytes_per_device` WireBytes, and runs the contract
+rules in `contracts.py`. It then compiles real `StepFns` on the host mesh
+and audits the engine seam itself: donated buffers must stay aliased in the
+lowering, the per-batch-size StepFns cache must hit, the elastic reshard
+helper must reset stateful carries, and the compiled step's collectives
+must re-verify the same wire totals end to end.
+
+Exit status is 0 iff no findings; `--json PATH` writes the machine-readable
+report (scripts/check.sh saves it as AUDIT_report.json for CI artifact
+upload on failure). See docs/ANALYSIS.md.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import NamedTuple
+
+from repro.analysis import trace as trace_mod
+from repro.analysis.contracts import Finding, check_strategy
+from repro.analysis.wire import UnmodeledCollectiveError, wire_total
+from repro.api.strategies import StrategyContext, get_strategy, \
+    list_strategies
+
+
+class AuditContext(NamedTuple):
+    """One analytic geometry the audit runs every strategy on."""
+
+    name: str                     # report key ("pod8", "multipod", ...)
+    ctx: StrategyContext          # geometry handed to the strategy
+    axis_sizes: dict              # mesh axis name -> size (trace env)
+
+
+def _make_ctx(axis_sizes: dict, outer_axes: tuple, *, block_size: int,
+              capacity: int) -> StrategyContext:
+    axes = tuple(axis_sizes)
+    p = 1
+    for s in axis_sizes.values():
+        p *= int(s)
+    po = 1
+    for a in outer_axes:
+        po *= int(axis_sizes[a])
+    inner = tuple(a for a in axes if a not in outer_axes)
+    return StrategyContext(axes=axes, num_shards=p, block_size=block_size,
+                           capacity=capacity, inner_axes=inner,
+                           outer_axes=outer_axes, outer_shards=po)
+
+
+def build_contexts(*, block_size: int = 64, capacity: int = 16,
+                   production: bool = True) -> tuple[AuditContext, ...]:
+    """The default audit geometries.
+
+    Degenerate, single-pod, multi-pod, and (optionally) the full
+    `launch.mesh.make_production_mesh(multi_pod=True)` shape — all purely
+    analytic, no devices touched.
+    """
+    specs = [
+        ("1dev", {"data": 1, "model": 1}, ()),
+        ("pod8", {"data": 2, "model": 4}, ()),
+        ("multipod", {"pod": 2, "data": 4}, ("pod",)),
+    ]
+    if production:
+        specs.append(
+            ("production", {"pod": 2, "data": 16, "model": 16}, ("pod",)))
+    return tuple(
+        AuditContext(name=name,
+                     ctx=_make_ctx(sizes, outer, block_size=block_size,
+                                   capacity=capacity),
+                     axis_sizes=sizes)
+        for name, sizes, outer in specs)
+
+
+def _wb_dict(wb) -> dict:
+    return {"inner": int(wb.inner), "outer": int(wb.outer),
+            "total": int(wb.inner) + int(wb.outer)}
+
+
+def audit_registry(strategies=None, contexts=None, *,
+                   engine_checks: bool = True) -> dict:
+    """Run the full audit; returns the machine-readable report.
+
+    `strategies`: names to audit (default: the whole registry).
+    `contexts`: `AuditContext`s (default: `build_contexts()`).
+    `engine_checks=False` skips the device-touching engine seam checks
+    (useful from tests that only exercise the analytic rules).
+    """
+    names = list(strategies) if strategies is not None else list_strategies()
+    contexts = tuple(contexts) if contexts is not None else build_contexts()
+    findings: list[Finding] = []
+    report: dict = {"strategies": {n: {} for n in names}}
+
+    for actx in contexts:
+        # exact (stateless) strategies' reduce signatures on THIS geometry
+        # are the reference set for the A-EXACT accumulate-fallback rule
+        traces: dict[str, trace_mod.StrategyTrace | None] = {}
+        exact_sigs: dict[str, tuple] = {}
+        for n in names:
+            strat = get_strategy(n)
+            try:
+                tr = trace_mod.trace_strategy(strat, actx.ctx,
+                                              actx.axis_sizes)
+            except Exception:  # noqa: BLE001 - re-raised as TRACE finding
+                tr = None
+            traces[n] = tr
+            if tr is not None and not tr.stateful:
+                exact_sigs[n] = trace_mod.signature_multiset(tr.reduce)
+
+        for n in names:
+            strat = get_strategy(n)
+            tr, fs = check_strategy(strat, actx.ctx, actx.axis_sizes,
+                                    context_name=actx.name,
+                                    exact_reduce_sigs=exact_sigs,
+                                    tr=traces[n])
+            findings.extend(fs)
+            entry: dict = {"findings": [f.as_dict() for f in fs]}
+            try:
+                entry["declared"] = _wb_dict(
+                    strat.bytes_per_device(actx.ctx))
+            except Exception as e:  # noqa: BLE001
+                entry["declared"] = f"error: {e}"
+            if tr is not None:
+                step_ops = tr.distribute + tr.reduce
+                try:
+                    entry["extracted"] = _wb_dict(wire_total(
+                        step_ops, actx.axis_sizes, actx.ctx.outer_axes))
+                except UnmodeledCollectiveError as e:
+                    entry["extracted"] = f"unmodeled: {e}"
+                entry["collectives"] = {
+                    "distribute": [c.describe() for c in tr.distribute],
+                    "reduce": [c.describe() for c in tr.reduce],
+                }
+                if tr.accumulate is not None:
+                    entry["collectives"]["accumulate"] = [
+                        c.describe() for c in tr.accumulate]
+                entry["stateful"] = tr.stateful
+            report["strategies"][n][actx.name] = entry
+
+    if engine_checks:
+        eng_findings, eng_report = _audit_engine(names)
+        findings.extend(eng_findings)
+        report["engine"] = eng_report
+
+    report["ok"] = not findings
+    report["num_findings"] = len(findings)
+    report["findings"] = [f.as_dict() for f in findings]
+    return report
+
+
+# ---------------------------------------------------------------------------
+# engine seam: compiled StepFns, donation, cache, elastic carry reset
+# ---------------------------------------------------------------------------
+
+
+def _audit_engine(names) -> tuple[list[Finding], dict]:
+    """Device-touching checks on the real host mesh (works on 1 CPU)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import DPMRConfig
+    from repro.core import dpmr
+    from repro.launch.mesh import OUTER_AXES, make_host_mesh
+    from repro.runtime.elastic import reshard_dpmr_state
+
+    findings: list[Finding] = []
+    report: dict = {"checks": []}
+
+    def bad(rule, strategy, message):
+        findings.append(Finding(rule=rule, strategy=strategy,
+                                context="engine", message=message))
+
+    def ok(check):
+        report["checks"].append(check)
+
+    mesh = make_host_mesh(1, 1)
+    axis_sizes = {a: int(mesh.shape[a]) for a in mesh.axis_names}
+    p = dpmr.num_shards(mesh)
+    batch = p * 8
+
+    for name in names:
+        cfg = DPMRConfig(num_features=1 << 10, max_features_per_sample=8,
+                         distribution=name)
+        try:
+            fns = dpmr.make_step_fns(cfg, mesh, batch)
+        except Exception as e:  # noqa: BLE001
+            bad("E-COMPILE", name,
+                f"make_step_fns failed on the host mesh: {e}")
+            continue
+        state = dpmr.init_state(cfg, mesh)
+        k = cfg.max_features_per_sample
+        b_sds = {
+            "ids": jax.ShapeDtypeStruct((batch, k), jnp.int32),
+            "vals": jax.ShapeDtypeStruct((batch, k), jnp.float32),
+            "labels": jax.ShapeDtypeStruct((batch,), jnp.float32),
+        }
+        s_sds = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+
+        # E-DONATE: train_step/apply_update take state donated; the
+        # lowering must record the aliasing (tf.aliasing_output) — a
+        # donated buffer that is silently copied doubles peak memory of
+        # the (F,)-sized table on real accelerators
+        for fn_name, lowered in (
+            ("train_step", fns.train_step.lower(s_sds, b_sds)),
+            ("apply_update", fns.apply_update.lower(
+                s_sds, s_sds.cold, s_sds.hot, 0.1)),
+        ):
+            if "tf.aliasing_output" not in lowered.as_text():
+                bad("E-DONATE", name,
+                    f"StepFns.{fn_name} lowering has no donated/aliased "
+                    "buffers — the state must be donated "
+                    "(donate_argnums) so updates reuse table memory")
+            else:
+                ok(f"{name}: {fn_name} donation aliased in lowering")
+
+        # E-WIRE: the COMPILED train_step's collectives re-verify the
+        # declared model end to end (host mesh geometry)
+        try:
+            jpr = fns.train_step.trace(s_sds, b_sds).jaxpr
+            ops = [c for c in trace_mod.collect_collectives(jpr)
+                   if c.prim != "psum"]  # hot-set/metrics psums are not
+            #                              part of the strategy wire model
+            extracted = wire_total(ops, axis_sizes, OUTER_AXES)
+            declared = get_strategy(name).bytes_per_device(fns.ctx)
+            if (int(declared.inner), int(declared.outer)) != (
+                    extracted.inner, extracted.outer):
+                bad("E-WIRE", name,
+                    f"compiled train_step carries inner={extracted.inner} "
+                    f"outer={extracted.outer} but the declared model says "
+                    f"inner={declared.inner} outer={declared.outer}")
+            else:
+                ok(f"{name}: compiled train_step wire total matches "
+                   "declared model")
+        except Exception as e:  # noqa: BLE001
+            bad("E-WIRE", name, f"compiled-step wire check failed: {e}")
+
+        # E-RESET: the elastic reshard helper must return stateful
+        # carries to zeros (a per-device residual is meaningless under a
+        # different shard assignment)
+        if get_strategy(name).init_carry(fns.ctx) is not None:
+            dirty = state._replace(strat=jnp.ones_like(state.strat))
+            fresh = reshard_dpmr_state(dirty, cfg, mesh)
+            if float(jnp.abs(fresh.strat).max()) != 0.0:
+                bad("E-RESET", name,
+                    "runtime.elastic.reshard_dpmr_state must reset the "
+                    "strategy carry to zeros")
+            else:
+                ok(f"{name}: elastic reshard resets the carry")
+
+    # E-CACHE: the engine's per-batch-size StepFns cache must hit (a miss
+    # means silent recompilation of every step on every call)
+    from repro.api.engine import DPMREngine
+    cfg = DPMRConfig(num_features=1 << 10, max_features_per_sample=8)
+    eng = DPMREngine(cfg, mesh)
+    if eng.step_fns(batch) is not eng.step_fns(batch):
+        bad("E-CACHE", "engine",
+            "DPMREngine.step_fns(batch_size) recompiles on a repeat "
+            "batch size instead of hitting the LRU cache")
+    else:
+        ok("engine: step_fns LRU cache hits on repeat batch size")
+    return findings, report
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.audit",
+        description="Static wire-model & contract audit of the DPMR "
+                    "strategy registry (see docs/ANALYSIS.md).")
+    ap.add_argument("--strategy", action="append", default=None,
+                    help="audit only this strategy (repeatable; default: "
+                         "the whole registry)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the machine-readable report here")
+    ap.add_argument("--no-engine", action="store_true",
+                    help="skip the device-touching engine-seam checks")
+    ap.add_argument("--quiet", action="store_true",
+                    help="print findings only, no per-strategy summary")
+    args = ap.parse_args(argv)
+
+    report = audit_registry(strategies=args.strategy,
+                            engine_checks=not args.no_engine)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+
+    if not args.quiet:
+        for name, per_ctx in sorted(report["strategies"].items()):
+            for ctx_name, entry in per_ctx.items():
+                declared = entry.get("declared")
+                extracted = entry.get("extracted")
+                n_find = len(entry.get("findings", []))
+                status = "ok" if n_find == 0 else f"{n_find} finding(s)"
+                print(f"{name:18s} {ctx_name:10s} declared={declared} "
+                      f"extracted={extracted} [{status}]")
+    for f in report["findings"]:
+        print(f"FINDING {f['rule']} [{f['strategy']} @ {f['context']}]: "
+              f"{f['message']}", file=sys.stderr)
+    n = report["num_findings"]
+    print(f"audit: {len(report['strategies'])} strategies, "
+          f"{n} finding(s) -> {'PASS' if report['ok'] else 'FAIL'}")
+    return 0 if report["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

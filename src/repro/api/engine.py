@@ -29,12 +29,17 @@ Step functions are compiled lazily per global batch size and LRU-cached
 batches without retaining every compilation forever. The distribution
 strategy (`cfg.distribution`) is resolved through the registry in
 `repro.api.strategies`.
+
+The updating steps donate the consumed state (`core.dpmr.StepFns`), so
+`engine.state` always points at live buffers but any OLD reference to it
+dies with the next `train_step`/`fit`; snapshot with
+`jax.tree.map(jnp.copy, engine.state)` if you need a pre-step copy.
 """
 from __future__ import annotations
 
+from collections.abc import Callable, Iterable
 import itertools
 import warnings
-from typing import Callable, Dict, Iterable, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -59,7 +64,7 @@ def put_batch(batch: dict, mesh) -> dict:
 
 
 def binary_prf_metrics(predict_fn: Callable[[dict], np.ndarray],
-                       test_batches: Iterable[dict]) -> Dict:
+                       test_batches: Iterable[dict]) -> dict:
     """Fig. 1 metrics: per-class precision/recall/F + macro average.
 
     `predict_fn(batch) -> probs`; batches must carry "labels".
@@ -121,7 +126,7 @@ class DPMREngine:
 
     def __init__(self, cfg: DPMRConfig, mesh, *, kernel_impl: str = "jnp",
                  cap_factor: float = 4.0, hot_ids=None,
-                 state: Optional[dpmr.DPMRState] = None,
+                 state: dpmr.DPMRState | None = None,
                  max_cached_fns: int = 8):
         self.cfg = cfg
         self.mesh = mesh
@@ -130,8 +135,8 @@ class DPMREngine:
         if max_cached_fns < 1:
             raise ValueError(f"max_cached_fns must be >= 1: {max_cached_fns}")
         self.max_cached_fns = max_cached_fns
-        self._fns: Dict[int, StepFns] = {}
-        self._loader: Optional[ShardedLoader] = None
+        self._fns: dict[int, StepFns] = {}
+        self._loader: ShardedLoader | None = None
         self._schedule = dpmr.make_schedule(cfg)
         with compat.set_mesh(mesh):
             self.state = state if state is not None else dpmr.init_state(
@@ -170,8 +175,8 @@ class DPMREngine:
 
     # -- data-plane resolution ----------------------------------------------
 
-    def _as_loader(self, data, spec: Optional[Dict]) -> \
-            Optional[ShardedLoader]:
+    def _as_loader(self, data, spec: dict | None) -> \
+            ShardedLoader | None:
         """Normalize a data argument to a ShardedLoader when it comes from
         the data plane (loader | DataSource | registered source name);
         returns None for plain iterables/callables."""
@@ -200,7 +205,7 @@ class DPMREngine:
 
     # -- training -----------------------------------------------------------
 
-    def train_step(self, batch: dict) -> Dict:
+    def train_step(self, batch: dict) -> dict:
         """One minibatch update; returns host-side metrics."""
         fns = self.step_fns(len(batch["labels"]))
         with compat.set_mesh(self.mesh):
@@ -209,8 +214,8 @@ class DPMREngine:
         return {"loss": float(m["loss"]), "accuracy": float(m["accuracy"]),
                 "overflow": int(m["overflow"])}
 
-    def fit_sgd(self, data, steps: Optional[int] = None, *,
-                spec: Optional[Dict] = None) -> List[Dict]:
+    def fit_sgd(self, data, steps: int | None = None, *,
+                spec: dict | None = None) -> list[dict]:
         """Minibatch SGD (one update per batch); returns the history.
 
         `data`: iterable of batches, a `ShardedLoader`, a `DataSource`, or a
@@ -232,16 +237,16 @@ class DPMREngine:
         else:
             batches = iter(data) if steps is None else \
                 itertools.islice(iter(data), steps)
-        history: List[Dict] = []
+        history: list[dict] = []
         base = int(self.state.step)   # continue numbering across resumes
         for i, batch in enumerate(batches):
             m = self.train_step(batch)
             history.append({"step": base + i + 1, **m})
         return history
 
-    def fit(self, data, iterations: Optional[int] = None,
-            eval_fn: Optional[Callable[["DPMREngine"], Dict]] = None, *,
-            spec: Optional[Dict] = None) -> List[Dict]:
+    def fit(self, data, iterations: int | None = None,
+            eval_fn: Callable[["DPMREngine"], dict] | None = None, *,
+            spec: dict | None = None) -> list[dict]:
         """Full-batch gradient descent: one update per ITERATION over the
         whole corpus (the paper's regime).
 
@@ -262,7 +267,7 @@ class DPMREngine:
                 "fit() needs a batch_iter_fn callable, a ShardedLoader, a "
                 f"DataSource, or a source name; got {type(data).__name__}")
         iterations = self.cfg.iterations if iterations is None else iterations
-        history: List[Dict] = []
+        history: list[dict] = []
         for it in range(iterations):
             acc_cold = jnp.zeros_like(self.state.cold)
             acc_hot = jnp.zeros_like(self.state.hot)
@@ -303,7 +308,7 @@ class DPMREngine:
                 {k: batch[k] for k in ("ids", "vals")}))
         return np.asarray(probs)
 
-    def evaluate(self, test_batches, *, spec: Optional[Dict] = None) -> Dict:
+    def evaluate(self, test_batches, *, spec: dict | None = None) -> dict:
         """Fig. 1 metrics: per-class precision/recall/F + macro average.
 
         `test_batches`: iterable of batches, or a `ShardedLoader` /
@@ -324,7 +329,7 @@ class DPMREngine:
     # -- checkpointing -------------------------------------------------------
 
     def save(self, directory: str, *, keep: int = 3, block: bool = True,
-             loader: Optional[ShardedLoader] = None) -> int:
+             loader: ShardedLoader | None = None) -> int:
         """Atomic checkpoint of the sparse state; returns the step saved.
 
         The data cursor of `loader` (default: the last loader handed to
@@ -343,9 +348,9 @@ class DPMREngine:
             step, self.state, block=block, extra=extra)
         return step
 
-    def restore(self, directory: str, step: Optional[int] = None, *,
-                loader: Optional[ShardedLoader] = None,
-                on_host_change: str = "error") -> Dict:
+    def restore(self, directory: str, step: int | None = None, *,
+                loader: ShardedLoader | None = None,
+                on_host_change: str = "error") -> dict:
         """Restore state in place (latest step by default); returns the
         checkpoint manifest. Leaves are placed under the engine's current
         shardings, so restoring onto a different mesh re-shards (for a mesh

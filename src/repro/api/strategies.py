@@ -12,21 +12,23 @@ The mesh is two-tier: `ctx.inner_axes` (ICI, fast) and `ctx.outer_axes`
 `bytes_per_device` wire model is therefore two-tier too — it returns a
 `WireBytes(inner, outer)` counting the bytes a device RECEIVES per step,
 classified by whether the sender sits in the same inner group (ICI) or in
-another outer group (DCN).
+another outer group (DCN). A device's own chunk never leaves the chip and
+is never counted — `repro.analysis.audit` cross-checks every model against
+the jaxpr-extracted collectives under exactly this convention.
 
-Built-ins (inner+outer == the legacy single-number model; P = shards,
-Pi = inner shards, cap = a2a capacity, |F|/P = block rows per device):
+Built-ins (P = shards, Pi = inner shards, cap = a2a capacity, |F|/P =
+block rows per device):
 
   a2a              the paper's shuffle: route_build + all_to_all of
                    requested rows, reverse all_to_all of per-feature
-                   gradient sums. Total 3*P*cap*4, |F|-independent; the
-                   (P-Pi)/P fraction addressed to other pods crosses DCN.
+                   gradient sums. Total 3*(P-1)*cap*4, |F|-independent;
+                   the (P-Pi) buckets from other pods cross DCN.
   allgather        the ship-the-table strawman: all_gather the full table,
                    dense scatter-add + psum_scatter reduce.
                    Total ~2*|F|*4, of which the blocks owned by other pods
                    (2*(|F|/P)*(P-Pi)*4) cross DCN.
   psum_scatter     hybrid: sparse a2a shuffle forward, dense psum_scatter
-                   reduce. 2*P*cap*4 + (|F|/P)*(P-1)*4.
+                   reduce. 2*(P-1)*cap*4 + (|F|/P)*(P-1)*4.
   hier_a2a         two-level exchange: each device mirrors its inner-peer
                    blocks across pods (all_gather over `pod`), the sparse
                    all-to-all then runs ONLY inside the fast inner axes,
@@ -74,7 +76,7 @@ feature table and collectives run over `ctx.axes` (or a tier subset).
 from __future__ import annotations
 
 import copy
-from typing import Dict, List, NamedTuple, Optional, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -112,12 +114,12 @@ class StrategyContext(NamedTuple):
     and set only the shard counts; only the collectives need real names.
     """
 
-    axes: Tuple[str, ...]    # mesh axis names the pipeline is manual over
+    axes: tuple[str, ...]    # mesh axis names the pipeline is manual over
     num_shards: int          # P = product of mesh axis sizes
     block_size: int          # rows of the feature table per device
     capacity: int            # per-(src,dst) a2a slots for cold features
-    inner_axes: Tuple[str, ...] = ()   # fast tier (ICI); () = all of `axes`
-    outer_axes: Tuple[str, ...] = ()   # slow tier (DCN); () = single tier
+    inner_axes: tuple[str, ...] = ()   # fast tier (ICI); () = all of `axes`
+    outer_axes: tuple[str, ...] = ()   # slow tier (DCN); () = single tier
     outer_shards: int = 1    # Po = product of outer axis sizes
     topk_frac: float = 0.25  # topk_reduce: kept fraction of the capacity
     #                          slots (k = ceil(topk_frac * capacity));
@@ -148,14 +150,14 @@ class DistributionStrategy:
     name: str = "base"
 
     def distribute(self, ctx: StrategyContext, cold_loc: jax.Array,
-                   cold_ids: jax.Array) -> Tuple[jax.Array, dict]:
+                   cold_ids: jax.Array) -> tuple[jax.Array, dict]:
         raise NotImplementedError
 
     def reduce(self, ctx: StrategyContext, cold_loc: jax.Array,
                grads_flat: jax.Array, fwd: dict) -> jax.Array:
         raise NotImplementedError
 
-    def init_carry(self, ctx: StrategyContext) -> Optional[jax.Array]:
+    def init_carry(self, ctx: StrategyContext) -> jax.Array | None:
         """Zero value of the per-device persistent state (None = stateless)."""
         return None
 
@@ -186,7 +188,7 @@ def _chunked_all_to_all(x: jax.Array, axes, num_chunks: int) -> jax.Array:
         return jax.lax.all_to_all(x, axes, 0, 0, tiled=True)
     bounds = [cap * i // n for i in range(n + 1)]
     parts = [jax.lax.all_to_all(x[:, lo:hi], axes, 0, 0, tiled=True)
-             for lo, hi in zip(bounds, bounds[1:]) if hi > lo]
+             for lo, hi in zip(bounds, bounds[1:], strict=False) if hi > lo]
     return jnp.concatenate(parts, axis=1)
 
 
@@ -241,11 +243,13 @@ class AllToAllStrategy(DistributionStrategy):
                                        _owner_base(ctx))
 
     def bytes_per_device(self, ctx):
-        # 3 (P, cap) f32 buffers (requests, responses, grad sums); the
-        # buckets addressed to other pods cross DCN
+        # 3 (P, cap) f32 buffers (requests, responses, grad sums); a
+        # device RECEIVES the (Pi-1) same-pod buckets over ICI and the
+        # (P-Pi) buckets addressed from other pods over DCN — its own
+        # bucket never leaves the chip
         pi = ctx.inner_shards
         outer = 3 * (ctx.num_shards - pi) * ctx.capacity * 4
-        return WireBytes(inner=3 * pi * ctx.capacity * 4, outer=outer)
+        return WireBytes(inner=3 * (pi - 1) * ctx.capacity * 4, outer=outer)
 
 
 class AllGatherStrategy(DistributionStrategy):
@@ -293,7 +297,7 @@ class PsumScatterStrategy(DistributionStrategy):
     def bytes_per_device(self, ctx):
         pi = ctx.inner_shards
         po_cross = ctx.num_shards - pi
-        inner = (2 * pi * ctx.capacity * 4
+        inner = (2 * (pi - 1) * ctx.capacity * 4
                  + ctx.block_size * (pi - 1) * 4)
         outer = (2 * po_cross * ctx.capacity * 4
                  + ctx.block_size * po_cross * 4)
@@ -397,8 +401,9 @@ class HierarchicalA2AStrategy(DistributionStrategy):
 
     def bytes_per_device(self, ctx):
         po, pi = ctx.outer_shards, ctx.inner_shards
-        # inner: the full sparse shuffle at Po-scaled capacity (all ICI)
-        inner = 3 * pi * (ctx.capacity * po) * 4 if pi > 1 else 0
+        # inner: the full sparse shuffle at Po-scaled capacity (all ICI),
+        # received from the (Pi-1) inner peers
+        inner = 3 * (pi - 1) * (ctx.capacity * po) * 4
         # outer: forward pod all_gather of the local block + reduce
         # psum_scatter of per-pod partials, both ring over Po
         outer = 2 * ctx.block_size * (po - 1) * 4
@@ -473,7 +478,7 @@ class CompressedReduceStrategy(DistributionStrategy):
         po_cross = ctx.num_shards - pi
         bp = self._padded_block(ctx)
         per_peer = bp + (bp // compression.BLOCK) * 4      # int8 + scales
-        inner = 2 * pi * ctx.capacity * 4 + pi * per_peer
+        inner = 2 * (pi - 1) * ctx.capacity * 4 + (pi - 1) * per_peer
         outer = 2 * po_cross * ctx.capacity * 4 + po_cross * per_peer
         return WireBytes(inner=inner, outer=outer)
 
@@ -573,7 +578,7 @@ class TopKReduceStrategy(DistributionStrategy):
         pi = ctx.inner_shards
         po_cross = ctx.num_shards - pi
         k = self._k(ctx)
-        inner = 2 * pi * ctx.capacity * 4 + pi * k * 8
+        inner = 2 * (pi - 1) * ctx.capacity * 4 + (pi - 1) * k * 8
         outer = 2 * po_cross * ctx.capacity * 4 + po_cross * k * 8
         return WireBytes(inner=inner, outer=outer)
 
@@ -612,7 +617,7 @@ class OverlapA2AStrategy(AllToAllStrategy):
                                        _owner_base(ctx))
 
 
-_REGISTRY: Dict[str, DistributionStrategy] = {}
+_REGISTRY: dict[str, DistributionStrategy] = {}
 
 
 def register_strategy(name: str, strategy: DistributionStrategy = None):
@@ -646,7 +651,7 @@ def get_strategy(name: str) -> DistributionStrategy:
             f"registered: {sorted(_REGISTRY)}") from None
 
 
-def list_strategies() -> List[str]:
+def list_strategies() -> list[str]:
     return sorted(_REGISTRY)
 
 

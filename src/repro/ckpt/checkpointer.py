@@ -27,7 +27,6 @@ import os
 import shutil
 import threading
 import time
-from typing import Dict, List, Optional
 
 import jax
 import numpy as np
@@ -38,11 +37,11 @@ class Checkpointer:
         self.dir = directory
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
-        self._thread: Optional[threading.Thread] = None
+        self._thread: threading.Thread | None = None
 
     # -- save ---------------------------------------------------------------
 
-    def save(self, step: int, state, extra: Optional[Dict] = None,
+    def save(self, step: int, state, extra: dict | None = None,
              block: bool = True):
         """Snapshot `state` (pytree of jax/np arrays) at `step`."""
         self.wait()
@@ -97,7 +96,7 @@ class Checkpointer:
 
     # -- restore --------------------------------------------------------------
 
-    def all_steps(self) -> List[int]:
+    def all_steps(self) -> list[int]:
         out = []
         for name in os.listdir(self.dir):
             if name.startswith("step_") and not name.endswith(".tmp"):
@@ -107,11 +106,11 @@ class Checkpointer:
                     pass
         return sorted(out)
 
-    def latest_step(self) -> Optional[int]:
+    def latest_step(self) -> int | None:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def restore(self, like, step: Optional[int] = None,
+    def restore(self, like, step: int | None = None,
                 shardings=None):
         """Restore into the structure of `like` (pytree). If `shardings` is
         given (pytree of NamedSharding matching `like`), leaves are placed
@@ -129,15 +128,15 @@ class Checkpointer:
                 for i in range(len(leaves))]
         if shardings is not None:
             sh_leaves = jax.tree.leaves(shardings)
-            out = [jax.device_put(a, s) for a, s in zip(arrs, sh_leaves)]
+            out = [jax.device_put(a, s) for a, s in zip(arrs, sh_leaves, strict=True)]
         else:
             out = [jax.device_put(a, l.sharding)
                    if isinstance(l, jax.Array) else jax.numpy.asarray(a)
-                   for a, l in zip(arrs, leaves)]
+                   for a, l in zip(arrs, leaves, strict=True)]
         return jax.tree.unflatten(treedef, out), manifest
 
 
-def manifest_extra(directory: str, step: Optional[int] = None) -> Dict:
+def manifest_extra(directory: str, step: int | None = None) -> dict:
     ck = Checkpointer(directory)
     step = ck.latest_step() if step is None else step
     with open(os.path.join(directory, f"step_{step:010d}",

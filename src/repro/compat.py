@@ -8,8 +8,8 @@ written once, against the new names.
 """
 from __future__ import annotations
 
+from collections.abc import Sequence
 import contextlib
-from typing import Optional, Sequence, Set
 
 import jax
 
@@ -56,7 +56,7 @@ def axis_size(axis_name):
 
 
 def shard_map(f, *, mesh, in_specs, out_specs,
-              axis_names: Optional[Set[str]] = None, check_vma: bool = False):
+              axis_names: set[str] | None = None, check_vma: bool = False):
     """jax.shard_map(...) on new jax; experimental.shard_map on old.
 
     `axis_names` follows the NEW convention: the set of mesh axes that are

@@ -6,7 +6,6 @@ as static arguments to jitted step builders.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 # ---------------------------------------------------------------------------
 # Hardware constants (TPU v5e) used by the roofline analysis.
@@ -151,7 +150,7 @@ class ParallelConfig:
 
     fsdp_axis: str = "data"          # DPMR dense face: params sharded here
     tensor_axis: str = "model"       # TP / expert-parallel / feature-owner axis
-    dp_axes: Tuple[str, ...] = ("pod", "data")
+    dp_axes: tuple[str, ...] = ("pod", "data")
     remat: str = "full"              # none | full | dots
     scan_layers: bool = True
     microbatches: int = 1            # grad-accumulation chunks per step

@@ -35,8 +35,9 @@ them exactly like the dense trainer does.
 """
 from __future__ import annotations
 
+from collections.abc import Callable
 import functools
-from typing import Callable, NamedTuple, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -61,7 +62,7 @@ class DPMRState(NamedTuple):
     #                       sharded over all mesh axes like cold
 
 
-def _axes(mesh) -> Tuple[str, ...]:
+def _axes(mesh) -> tuple[str, ...]:
     return tuple(mesh.axis_names)
 
 
@@ -232,6 +233,13 @@ class StepFns(NamedTuple):
     `ctx` is the `StrategyContext` the steps were compiled against —
     feed it to `strategy.bytes_per_device` for the two-tier wire model
     of this exact geometry.
+
+    `train_step` and `apply_update` DONATE their state argument (the
+    (F,)-sized table/accumulator buffers alias the outputs instead of
+    being copied — `repro.analysis.audit` verifies the aliasing survives
+    lowering). Treat the passed-in state as consumed; snapshot with
+    `jax.tree.map(jnp.copy, state)` first if you need the old value.
+    `grad_step` and `predict` do not donate.
     """
 
     train_step: Callable     # (state, batch) -> (state, metrics)
@@ -324,7 +332,13 @@ def make_step_fns(cfg: DPMRConfig, mesh, batch_size: int,
                   in_specs=(shard, rep, rep, shard, shard),
                   out_specs=shard)
 
-    @jax.jit
+    # the consumed state is DONATED in both updating steps: the (F,)-sized
+    # table/accumulator buffers alias their outputs instead of being copied
+    # (the analysis auditor checks the aliasing survives lowering). Callers
+    # must treat the passed-in state as dead — engine.train_step/fit do.
+    # grad_step/predict deliberately do NOT donate: fit() reuses one state
+    # across many grad_steps, and predict never updates it.
+    @functools.partial(jax.jit, donate_argnums=(0,))
     def train_step(state: DPMRState, batch):
         cold, hot, hot_ids, cold_acc, hot_acc, step, strat, m = train_m(
             state.cold, state.hot, state.hot_ids, state.cold_acc,
@@ -338,7 +352,7 @@ def make_step_fns(cfg: DPMRConfig, mesh, batch_size: int,
         return grad_m(state.cold, state.hot, state.hot_ids, state.strat,
                       batch["ids"], batch["vals"], batch["labels"])
 
-    @jax.jit
+    @functools.partial(jax.jit, donate_argnums=(0,))
     def apply_update(state: DPMRState, grad_cold, grad_hot, lr: float):
         cold, cold_acc = optimize(cfg, state.cold, state.cold_acc,
                                   grad_cold, lr)

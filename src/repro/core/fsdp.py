@@ -20,7 +20,6 @@ iteration when XLA's choices are suboptimal).
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -70,7 +69,7 @@ def _bwd(axis, res, gy):
 dpmr_dense_linear.defvjp(_fwd, _bwd)
 
 
-def fsdp_specs(defs_tree, mesh) -> Tuple:
+def fsdp_specs(defs_tree, mesh) -> tuple:
     """(sharding specs, shardings) for a parameter def tree — the dense-face
     storage layout (delegates to the logical-axis rules)."""
     from repro import sharding as shd

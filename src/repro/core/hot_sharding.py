@@ -12,7 +12,6 @@ statistic the paper passes to its sharding mappers.
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -45,7 +44,7 @@ def select_hot(counts: jax.Array, threshold: float, max_hot: int
 
 
 def split_hot(ids_flat: jax.Array, hot_ids: jax.Array
-              ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+              ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Partition flat ids into hot/cold.
 
     Returns (hot_slot (n,) int32 index into hot_ids or -1,

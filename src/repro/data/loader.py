@@ -62,11 +62,11 @@ One loader owns everything between a `DataSource` and the training step:
 """
 from __future__ import annotations
 
+from collections.abc import Callable, Iterator
 import dataclasses
 import queue
 import threading
 import warnings
-from typing import Callable, Dict, Iterator, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -77,7 +77,7 @@ from repro.data.ownership import ShardAssignment, reassign_state
 from repro.data.sources import DataSource
 
 
-def put_sharded(batch: Dict, mesh) -> Dict:
+def put_sharded(batch: dict, mesh) -> dict:
     """Host→device placement: every batch leaf sharded over all mesh axes.
 
     THE definition of sparse-face placement — `repro.api.engine.put_batch`
@@ -101,11 +101,11 @@ class Cursor:
     epoch: int = 0
     step: int = 0
 
-    def to_dict(self) -> Dict[str, int]:
+    def to_dict(self) -> dict[str, int]:
         return {"epoch": int(self.epoch), "step": int(self.step)}
 
     @classmethod
-    def from_dict(cls, d: Dict) -> "Cursor":
+    def from_dict(cls, d: dict) -> "Cursor":
         return cls(epoch=int(d["epoch"]), step=int(d["step"]))
 
 
@@ -149,15 +149,15 @@ class ShardedLoader:
     """
 
     def __init__(self, source: DataSource, mesh=None, *,
-                 placement: Union[str, Callable] = "sharded",
-                 host_index: Optional[int] = None,
-                 num_hosts: Optional[int] = None,
+                 placement: str | Callable = "sharded",
+                 host_index: int | None = None,
+                 num_hosts: int | None = None,
                  ownership: str = "auto",
-                 batch_divisor: Optional[int] = None,
+                 batch_divisor: int | None = None,
                  remainder: str = "drop",
                  prefetch: int = 2,
-                 epoch_size: Optional[int] = None,
-                 cursor: Optional[Cursor] = None,
+                 epoch_size: int | None = None,
+                 cursor: Cursor | None = None,
                  shuffle: bool = False,
                  shuffle_seed: int = 0):
         self.source = source
@@ -240,7 +240,7 @@ class ShardedLoader:
         self._seek_token = 0   # bumped by seek(); invalidates live iterators
 
     @property
-    def assignment(self) -> Optional[ShardAssignment]:
+    def assignment(self) -> ShardAssignment | None:
         """The global chunk `ShardAssignment` in force, or None when this
         loader reads by stride (synthetic sources, ownership='stride')."""
         return self._assignment
@@ -251,7 +251,7 @@ class ShardedLoader:
     def cursor(self) -> Cursor:
         return self._cursor
 
-    def seek(self, cursor: Union[Cursor, Dict]) -> None:
+    def seek(self, cursor: Cursor | dict) -> None:
         """Reposition the stream; the next batch is the one an uninterrupted
         run would have produced at this cursor.
 
@@ -263,7 +263,7 @@ class ShardedLoader:
         self._seek_token += 1
         self._cursor = cursor
 
-    def state_dict(self) -> Dict:
+    def state_dict(self) -> dict:
         d = {"cursor": self._cursor.to_dict(),
              "source": self.source_name,
              "batch_size": int(getattr(self.source, "batch_size", 0)),
@@ -276,7 +276,7 @@ class ShardedLoader:
             d["assignment"] = self._assignment.to_dict()
         return d
 
-    def load_state_dict(self, state: Dict, *,
+    def load_state_dict(self, state: dict, *,
                         on_host_change: str = "error") -> None:
         """Restore a `state_dict()` position, validating that the stream it
         was recorded against is the one this loader reads.
@@ -373,7 +373,7 @@ class ShardedLoader:
 
     # -- iteration ----------------------------------------------------------
 
-    def batches(self, limit: Optional[int] = None) -> Iterator[Dict]:
+    def batches(self, limit: int | None = None) -> Iterator[dict]:
         """Yield up to `limit` placed batches from the cursor onward,
         rolling over epochs on bounded sources (None = unbounded stream).
 
@@ -392,7 +392,7 @@ class ShardedLoader:
             return
         yield from self._prefetched(plan, token)
 
-    def epoch(self, from_start: bool = False) -> Iterator[Dict]:
+    def epoch(self, from_start: bool = False) -> Iterator[dict]:
         """The remainder of the current epoch (or, with `from_start`, the
         whole current epoch); afterwards the cursor sits at the next epoch's
         start. One call == one full pass of this host's shard — the paper's
@@ -433,7 +433,7 @@ class ShardedLoader:
                 "remaining plan is stale — create a new iterator with "
                 "batches()/epoch()")
 
-    def _positions(self, start: Cursor, limit: Optional[int]
+    def _positions(self, start: Cursor, limit: int | None
                    ) -> Iterator[tuple]:
         """(position, cursor-after) pairs from `start`, epoch-rolling."""
         spe = self.steps_per_epoch
@@ -480,7 +480,7 @@ class ShardedLoader:
             self._order_cache = (epoch, order)
         return order
 
-    def _load(self, pos: Cursor) -> Dict[str, np.ndarray]:
+    def _load(self, pos: Cursor) -> dict[str, np.ndarray]:
         # content is a pure function of the cursor: without shuffling it
         # depends only on `step` (every epoch re-reads the same shard in
         # the same order, the deterministic full-batch regime); with
@@ -493,7 +493,7 @@ class ShardedLoader:
                 index = int(self._permutation(pos.epoch)[index])
         return self._conform(self.source.batch(index))
 
-    def _conform(self, batch: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+    def _conform(self, batch: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
         d = self.batch_divisor
         b = next(iter(batch.values())).shape[0]
         rem = b % d
@@ -514,7 +514,7 @@ class ShardedLoader:
             out[k] = np.concatenate([np.asarray(v), fill], axis=0)
         return out
 
-    def _place(self, batch: Dict[str, np.ndarray]) -> Dict:
+    def _place(self, batch: dict[str, np.ndarray]) -> dict:
         if callable(self.placement):
             return self.placement(batch)
         if self.placement == "sharded":
@@ -526,7 +526,7 @@ class ShardedLoader:
         raise ValueError(f"unknown placement {self.placement!r}")
 
     def _prefetched(self, plan: Iterator[tuple],
-                    token: int) -> Iterator[Dict]:
+                    token: int) -> Iterator[dict]:
         """Background-thread synthesis + placement, bounded-queue delivery.
 
         The cursor advances on the CONSUMER side as batches are handed out;

@@ -40,7 +40,6 @@ interrupted epoch.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
 
 __all__ = ["ShardAssignment", "reassign_state"]
 
@@ -119,7 +118,7 @@ class ShardAssignment:
         return range(lo, min(self.num_batches,
                              lo + self.batches_per_chunk))
 
-    def owned_batches(self, host: int) -> List[int]:
+    def owned_batches(self, host: int) -> list[int]:
         """Global batch indices this host owns, in on-disk read order."""
         self._check_host(host)
         if self.kind == "stride":
@@ -147,7 +146,7 @@ class ShardAssignment:
 
     # -- (de)serialization — JSON-native, rides in checkpoint extras --------
 
-    def to_dict(self) -> Dict:
+    def to_dict(self) -> dict:
         d = {"kind": self.kind, "num_hosts": self.num_hosts,
              "num_batches": self.num_batches}
         if self.kind == "chunk":
@@ -157,7 +156,7 @@ class ShardAssignment:
         return d
 
     @classmethod
-    def from_dict(cls, d: Dict) -> "ShardAssignment":
+    def from_dict(cls, d: dict) -> "ShardAssignment":
         return cls(kind=d["kind"], num_hosts=int(d["num_hosts"]),
                    num_batches=int(d["num_batches"]),
                    batches_per_chunk=int(d.get("batches_per_chunk", 0)),
@@ -166,8 +165,8 @@ class ShardAssignment:
                                       in d.get("chunk_ranges", ())))
 
 
-def reassign_state(state: Dict, num_hosts: int,
-                   host_index: Optional[int] = None) -> Dict:
+def reassign_state(state: dict, num_hosts: int,
+                   host_index: int | None = None) -> dict:
     """Rewrite a loader `state_dict()` for a NEW host count.
 
     The host-local step of the saved cursor addresses the OLD assignment's

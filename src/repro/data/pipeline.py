@@ -9,7 +9,6 @@ enough structure for loss to move in the integration tests.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
 
 import numpy as np
 
@@ -32,7 +31,7 @@ class LMDataset:
         # sparse-ish Markov transition structure (each token -> 8 likely next)
         self._next = rng.integers(0, v, size=(v, 8)).astype(np.int32)
 
-    def batch(self, step: int) -> Dict[str, np.ndarray]:
+    def batch(self, step: int) -> dict[str, np.ndarray]:
         cfg = self.cfg
         rng = np.random.default_rng(
             np.random.SeedSequence([cfg.seed, step]))
@@ -54,7 +53,7 @@ class LMDataset:
     # (bit-identical batches; migration note in CHANGES.md).
 
 
-def encdec_batch(ds: LMDataset, step: int, d_model: int) -> Dict:
+def encdec_batch(ds: LMDataset, step: int, d_model: int) -> dict:
     """Whisper-style batch: stub frame embeddings + target tokens."""
     base = ds.batch(step)
     b, s = base["tokens"].shape

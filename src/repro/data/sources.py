@@ -36,10 +36,10 @@ or `register_source("name", factory)` where `factory(**spec)` builds one.
 """
 from __future__ import annotations
 
+from collections.abc import Callable, Iterator
 import json
 import os
 import threading
-from typing import Callable, Dict, Iterator, List, Optional
 
 import numpy as np
 
@@ -60,14 +60,14 @@ class DataSource:
 
     name: str = "base"
     batch_size: int = 0
-    num_batches: Optional[int] = None
+    num_batches: int | None = None
 
-    def batch(self, index: int) -> Dict[str, np.ndarray]:
+    def batch(self, index: int) -> dict[str, np.ndarray]:
         """The batch at `index` — MUST be a pure function of the index."""
         raise NotImplementedError
 
     def iter_batches(self, start: int = 0,
-                     limit: Optional[int] = None) -> Iterator[Dict]:
+                     limit: int | None = None) -> Iterator[dict]:
         """Plain host-side iteration (no sharding, no prefetch)."""
         i = start
         while limit is None or i < start + limit:
@@ -77,7 +77,7 @@ class DataSource:
             i += 1
 
     def owned_shards(self, host: int, num_hosts: int
-                     ) -> Optional[ShardAssignment]:
+                     ) -> ShardAssignment | None:
         """The global `ShardAssignment` dividing this corpus over
         `num_hosts` hosts (`host` is validated against it).
 
@@ -105,7 +105,7 @@ class DataSource:
 # ---------------------------------------------------------------------------
 
 
-_REGISTRY: Dict[str, Callable[..., DataSource]] = {}
+_REGISTRY: dict[str, Callable[..., DataSource]] = {}
 
 
 def register_source(name: str, factory: Callable[..., DataSource] = None):
@@ -136,7 +136,7 @@ def get_source(name: str, **spec) -> DataSource:
     return factory(**spec)
 
 
-def list_sources() -> List[str]:
+def list_sources() -> list[str]:
     return sorted(_REGISTRY)
 
 
@@ -159,7 +159,7 @@ class ZipfSparseSource(DataSource):
     name = "zipf_sparse"
 
     def __init__(self, spec: sparse_corpus.CorpusSpec = None, *,
-                 batch_size: int = 512, num_batches: Optional[int] = None,
+                 batch_size: int = 512, num_batches: int | None = None,
                  start: int = 0, **spec_kw):
         if spec is not None and spec_kw:
             raise TypeError("pass either spec= or CorpusSpec fields, not both")
@@ -169,7 +169,7 @@ class ZipfSparseSource(DataSource):
         self.num_batches = None if num_batches is None else int(num_batches)
         self.start = int(start)
 
-    def batch(self, index: int) -> Dict[str, np.ndarray]:
+    def batch(self, index: int) -> dict[str, np.ndarray]:
         self._check_index(index)
         return sparse_corpus.make_batch(
             self.spec, self.batch_size,
@@ -189,7 +189,7 @@ class LMMarkovSource(DataSource):
     name = "lm_markov"
 
     def __init__(self, *, vocab_size: int, seq_len: int, batch_size: int,
-                 seed: int = 0, num_batches: Optional[int] = None,
+                 seed: int = 0, num_batches: int | None = None,
                  encdec_d_model: int = 0):
         self._ds = LMDataset(LMDataConfig(vocab_size, seq_len, batch_size,
                                           seed=seed))
@@ -197,7 +197,7 @@ class LMMarkovSource(DataSource):
         self.num_batches = None if num_batches is None else int(num_batches)
         self.encdec_d_model = int(encdec_d_model)
 
-    def batch(self, index: int) -> Dict[str, np.ndarray]:
+    def batch(self, index: int) -> dict[str, np.ndarray]:
         self._check_index(index)
         if self.encdec_d_model:
             return encdec_batch(self._ds, index, self.encdec_d_model)
@@ -217,8 +217,8 @@ def _shard_path(directory: str, shard: int) -> str:
 
 
 def write_file_corpus(directory: str, source: DataSource,
-                      num_batches: Optional[int] = None,
-                      batches_per_chunk: int = 8) -> Dict:
+                      num_batches: int | None = None,
+                      batches_per_chunk: int = 8) -> dict:
     """Materialize `source` into sharded chunk files under `directory`.
 
     Each chunk file holds `batches_per_chunk` consecutive batches with every
@@ -291,7 +291,7 @@ class FileSparseSource(DataSource):
         self.num_chunks = int(self.manifest["num_chunks"])
         self.cache_chunks = max(1, int(cache_chunks))
         self._lock = threading.Lock()
-        self._cache: Dict[int, Dict[str, np.ndarray]] = {}
+        self._cache: dict[int, dict[str, np.ndarray]] = {}
         self._chunk_loads = 0
         self._chunks_touched: set = set()
 
@@ -305,7 +305,7 @@ class FileSparseSource(DataSource):
         return a
 
     @property
-    def read_stats(self) -> Dict[str, int]:
+    def read_stats(self) -> dict[str, int]:
         """Chunk-file I/O since construction: `chunk_loads` counts every
         np.load (cache misses included re-reads), `unique_chunks` the
         distinct files touched — the number a host under chunk ownership
@@ -314,7 +314,7 @@ class FileSparseSource(DataSource):
             return {"chunk_loads": self._chunk_loads,
                     "unique_chunks": len(self._chunks_touched)}
 
-    def batch(self, index: int) -> Dict[str, np.ndarray]:
+    def batch(self, index: int) -> dict[str, np.ndarray]:
         self._check_index(index)
         chunk, off = divmod(index, self.batches_per_chunk)
         with self._lock:

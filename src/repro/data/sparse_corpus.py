@@ -9,7 +9,6 @@ b tuned to the target positive rate.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 import numpy as np
 
@@ -37,7 +36,7 @@ def _zipf_ids(rng: np.random.Generator, spec: CorpusSpec, n: int
     return h.astype(np.int32)
 
 
-def true_weights(spec: CorpusSpec) -> Tuple[np.ndarray, np.ndarray]:
+def true_weights(spec: CorpusSpec) -> tuple[np.ndarray, np.ndarray]:
     """(ids, weights) of the sparse ground truth.
 
     Signal lives on the most FREQUENT features (the Zipf head) — as in real

@@ -1,7 +1,6 @@
 """Shared model plumbing: def stacking for scan, embedding, LM head, loss."""
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -94,7 +93,7 @@ def lm_head(params, x, cfg: ModelConfig):
     return logits
 
 
-def cross_entropy(logits, labels, mask: Optional[jax.Array] = None):
+def cross_entropy(logits, labels, mask: jax.Array | None = None):
     """logits: (B, S, V) f32; labels: (B, S) int32. Returns mean nll."""
     logits = logits.astype(jnp.float32)
     lse = jax.scipy.special.logsumexp(logits, axis=-1)

@@ -11,7 +11,6 @@ is the TPU-optimized equivalent and is validated against this code).
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -120,7 +119,7 @@ def attn_defs(cfg: ModelConfig) -> dict:
     return defs
 
 
-def mlp_defs(cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+def mlp_defs(cfg: ModelConfig, d_ff: int | None = None) -> dict:
     d, f = cfg.d_model, d_ff or cfg.d_ff
     pt = cfg.param_dtype
     if cfg.mlp_type == "swiglu":

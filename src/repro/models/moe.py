@@ -19,7 +19,6 @@ axis (mixtral: 8 over 16), experts replicate and the `ff` dim shards instead
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -74,7 +73,7 @@ def expert_capacity(cfg: ModelConfig, group_size: int) -> int:
 
 
 def moe_block(p, x, cfg: ModelConfig,
-              group_size: int = GROUP_SIZE) -> Tuple[jax.Array, jax.Array]:
+              group_size: int = GROUP_SIZE) -> tuple[jax.Array, jax.Array]:
     """x: (B, S, D) -> (out (B, S, D), aux_loss scalar)."""
     b, s, d = x.shape
     e, k = cfg.num_experts, cfg.experts_per_token

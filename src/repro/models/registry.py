@@ -6,8 +6,8 @@ them to ShapeDtypeStructs + NamedShardings without allocating anything.
 """
 from __future__ import annotations
 
+from collections.abc import Callable
 import dataclasses
-from typing import Callable, Optional, Tuple
 
 
 from repro.configs import ARCH_IDS, get_config
@@ -22,10 +22,10 @@ class ArchSpec:
     cfg: ModelConfig
     defs: Callable                  # (cfg) -> params defs tree
     forward: Callable               # (params, batch, cfg, parallel) -> (logits, aux)
-    prefill: Optional[Callable]     # (params, batch, cfg, parallel) -> (logits, cache)
-    decode_step: Optional[Callable]  # (params, cache, tokens, cfg) -> (logits, cache)
-    cache_defs: Optional[Callable]  # (cfg, batch, max_len) -> cache defs
-    supported_shapes: Tuple[str, ...]
+    prefill: Callable | None     # (params, batch, cfg, parallel) -> (logits, cache)
+    decode_step: Callable | None  # (params, cache, tokens, cfg) -> (logits, cache)
+    cache_defs: Callable | None  # (cfg, batch, max_len) -> cache defs
+    supported_shapes: tuple[str, ...]
     skip_reason: str = ""           # why some shapes are skipped (DESIGN.md)
 
 

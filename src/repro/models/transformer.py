@@ -12,7 +12,6 @@ sharding *is* the DPMR dense face: XLA materializes per-layer all-gather
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -110,7 +109,7 @@ def decoder_layer(p, x, cfg: ModelConfig, positions, sp: bool = True,
 
 
 def forward(params, tokens, cfg: ModelConfig,
-            parallel: Optional[ParallelConfig] = None):
+            parallel: ParallelConfig | None = None):
     """Train/prefill forward -> (logits (B, S, V) f32, aux_loss scalar)."""
     parallel = parallel or ParallelConfig()
     b, s = tokens.shape
@@ -147,7 +146,7 @@ def forward(params, tokens, cfg: ModelConfig,
 
 
 def prefill(params, tokens, cfg: ModelConfig,
-            parallel: Optional[ParallelConfig] = None):
+            parallel: ParallelConfig | None = None):
     """Serve-side prefill: returns (last-token logits (B,1,V), cache).
 
     Collects per-layer K/V during the layer scan; under SWA the cache keeps

@@ -329,7 +329,7 @@ def xlstm_decode_step(params, cache, tokens, cfg: ModelConfig,
     del unroll  # already a python loop over heterogeneous blocks
     x = common.embed_tokens(params, tokens, cfg)
     new_blocks = []
-    for bp, bc in zip(params["blocks"], cache["blocks"]):
+    for bp, bc in zip(params["blocks"], cache["blocks"], strict=True):
         if _is_slstm(bp):
             st = bc["slstm"]
             state = (st["c"], st["n"], st["m"], st["h"])

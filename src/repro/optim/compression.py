@@ -25,7 +25,6 @@ the same error-feedback discipline as the quantizer above.
 from __future__ import annotations
 
 import math
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +34,7 @@ from repro import compat
 BLOCK = 2048
 
 
-def _quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+def _quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Per-block symmetric int8. x: (N,) f32 (N % BLOCK == 0 after pad)."""
     xb = x.reshape(-1, BLOCK)
     scale = jnp.max(jnp.abs(xb), axis=1, keepdims=True) / 127.0
@@ -61,7 +60,7 @@ def topk_count(n: int, frac: float) -> int:
     return int(min(n, max(1, math.ceil(frac * n))))
 
 
-def topk_select(x: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+def topk_select(x: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
     """Top-k selection along the last axis: `(indices, mask)` of the k
     largest entries per row (ties broken by position, exactly
     `jax.lax.top_k`'s order). `x` is the selection key — pass magnitudes,
@@ -84,7 +83,7 @@ def topk_mask(x: jax.Array, k: int) -> jax.Array:
 
 
 def compress_psum(g: jax.Array, err: jax.Array, axis: str
-                  ) -> Tuple[jax.Array, jax.Array]:
+                  ) -> tuple[jax.Array, jax.Array]:
     """Error-feedback int8 psum over `axis`. g, err: same shape.
 
     Returns (mean-reduced g_hat, new error state).
@@ -111,7 +110,7 @@ def compress_tree_psum(grads, err_tree, axis: str):
     """Apply compress_psum leaf-wise."""
     flat_g, treedef = jax.tree.flatten(grads)
     flat_e = jax.tree.leaves(err_tree)
-    outs = [compress_psum(g, e, axis) for g, e in zip(flat_g, flat_e)]
+    outs = [compress_psum(g, e, axis) for g, e in zip(flat_g, flat_e, strict=True)]
     g_hat = jax.tree.unflatten(treedef, [o[0] for o in outs])
     new_err = jax.tree.unflatten(treedef, [o[1] for o in outs])
     return g_hat, new_err
@@ -122,7 +121,7 @@ def init_error_state(params):
     return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
 
 
-def wire_bytes(params) -> Tuple[int, int]:
+def wire_bytes(params) -> tuple[int, int]:
     """(uncompressed, compressed) bytes per cross-pod reduction."""
     n = sum(p.size for p in jax.tree.leaves(params))
     raw = n * 4

@@ -7,7 +7,8 @@ large archs (llama3-405b, mixtral) can run bf16 moments to fit HBM.
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple, Optional
+from collections.abc import Callable
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -83,7 +84,7 @@ def _adam_init(params, od):
 
 
 def _adamw_update(grads, state, params, lr, cfg: TrainConfig,
-                  weight_decay: Optional[float] = None):
+                  weight_decay: float | None = None):
     wd = cfg.weight_decay if weight_decay is None else weight_decay
     count = state["count"] + 1
     b1, b2 = cfg.beta1, cfg.beta2

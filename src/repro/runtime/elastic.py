@@ -11,7 +11,6 @@ one.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -67,8 +66,8 @@ def reshard_dpmr_state(state: dpmr.DPMRState, cfg: DPMRConfig, new_mesh
     )
 
 
-def reshard_data_state(data_state: Dict, num_hosts: int,
-                       host_index: Optional[int] = None) -> Dict:
+def reshard_data_state(data_state: dict, num_hosts: int,
+                       host_index: int | None = None) -> dict:
     """Rewrite a loader `state_dict()` (a checkpoint's `extra["data"]`) for
     a NEW data-plane host count — the input-face analogue of
     `reshard_dpmr_state`.

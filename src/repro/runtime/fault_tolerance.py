@@ -11,12 +11,12 @@ a step-time watchdog that flags outliers for the scheduler to evict.
 from __future__ import annotations
 
 import collections
+from collections.abc import Callable
 import logging
 import signal
 import statistics
 import threading
 import time
-from typing import Callable, Optional
 
 log = logging.getLogger("repro.ft")
 
@@ -55,7 +55,7 @@ class StragglerWatchdog:
         self.times = collections.deque(maxlen=window)
         self.factor = factor
         self.events = []
-        self._t0: Optional[float] = None
+        self._t0: float | None = None
 
     def step_start(self):
         self._t0 = time.monotonic()
@@ -88,7 +88,7 @@ class FailureInjector:
             raise RuntimeError(f"injected failure at step {step}")
 
 
-def run_with_restarts(make_loop: Callable[[Optional[int]], int],
+def run_with_restarts(make_loop: Callable[[int | None], int],
                       max_restarts: int = 3) -> int:
     """Run `make_loop(resume_step)` restarting on failure.
 

@@ -11,13 +11,13 @@ that hold the data, exactly the paper's "parameters distributed like samples".
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple, Union
+from collections.abc import Sequence
 
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-AxisNames = Tuple[Optional[str], ...]
+AxisNames = tuple[str | None, ...]
 
 # logical axis -> preference-ordered mesh axes
 DEFAULT_RULES = {
@@ -41,7 +41,7 @@ DEFAULT_RULES = {
 }
 
 
-def mesh_axis_size(mesh: Mesh, names: Union[str, Sequence[str], None]) -> int:
+def mesh_axis_size(mesh: Mesh, names: str | Sequence[str] | None) -> int:
     if names is None:
         return 1
     if isinstance(names, str):
@@ -56,7 +56,7 @@ def logical_to_spec(
     logical: AxisNames,
     shape: Sequence[int],
     mesh: Mesh,
-    rules: Optional[dict] = None,
+    rules: dict | None = None,
 ) -> P:
     """Translate logical axis names to a PartitionSpec for `mesh`.
 
@@ -67,7 +67,7 @@ def logical_to_spec(
     rules = rules or DEFAULT_RULES
     used: set = set()
     out = []
-    for dim, name in zip(shape, logical):
+    for dim, name in zip(shape, logical, strict=True):
         if name is None:
             out.append(None)
             continue
@@ -141,7 +141,7 @@ def init_from_defs(defs, key, scale_fn=None):
     )
     keys = jax.random.split(key, len(leaves))
     out = []
-    for k, ann in zip(keys, leaves):
+    for k, ann in zip(keys, leaves, strict=True):
         if scale_fn is not None:
             std = scale_fn(ann)
         else:

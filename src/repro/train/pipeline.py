@@ -17,7 +17,7 @@ Bubble fraction = (S-1)/(M+S-1); pick M >= 4S to keep it under 20%.
 """
 from __future__ import annotations
 
-from typing import Callable
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp

@@ -1,7 +1,7 @@
 """Serve-step builders: prefill and decode with sharded KV/state caches."""
 from __future__ import annotations
 
-from typing import Callable
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp

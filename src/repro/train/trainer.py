@@ -13,7 +13,7 @@ int8 (optim/compression.py).
 """
 from __future__ import annotations
 
-from typing import Callable, Dict
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +30,7 @@ AUX_COEF = 0.01      # MoE load-balance loss weight
 
 
 def state_defs(spec, cfg: ModelConfig, train_cfg: TrainConfig,
-               parallel: ParallelConfig) -> Dict:
+               parallel: ParallelConfig) -> dict:
     """Annotated defs for the full train state (params + opt + step)."""
     pd = spec.defs(cfg)
     opt = optimizers.get_optimizer(train_cfg.optimizer)
@@ -47,7 +47,7 @@ def state_defs(spec, cfg: ModelConfig, train_cfg: TrainConfig,
 
 
 def init_state(spec, cfg: ModelConfig, train_cfg: TrainConfig,
-               parallel: ParallelConfig, key) -> Dict:
+               parallel: ParallelConfig, key) -> dict:
     pd = spec.defs(cfg)
     params = shd.init_from_defs(pd, key, scale_fn=common.embed_init_scale)
     opt = optimizers.get_optimizer(train_cfg.optimizer)
@@ -68,7 +68,7 @@ def make_loss_fn(spec, cfg: ModelConfig, parallel: ParallelConfig):
     return loss_fn
 
 
-def _split_micro(batch: Dict, k: int) -> Dict:
+def _split_micro(batch: dict, k: int) -> dict:
     def sp(x):
         b = x.shape[0]
         assert b % k == 0, (b, k)

@@ -1,0 +1,301 @@
+"""Auditor tests: the jaxpr-level wire-model & contract checks of
+`repro.analysis` — every registered strategy must pass on 1-device,
+8-device single-pod, and (2, 4) multi-pod analytic contexts; deliberately
+miswired strategies must be rejected; and the extracted collective
+signatures are pinned per strategy so future wire drift is caught even if
+someone edits the declared model and the extractor in lockstep."""
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import (
+    audit_registry,
+    build_contexts,
+    check_strategy,
+    collective_wire,
+    trace_strategy,
+    wire_total,
+)
+from repro.analysis.audit import AuditContext
+from repro.analysis.trace import Collective
+from repro.api.strategies import (
+    _REGISTRY,
+    AllToAllStrategy,
+    TopKReduceStrategy,
+    WireBytes,
+    get_strategy,
+    list_strategies,
+    register_strategy,
+)
+
+STRATEGIES = ("a2a", "allgather", "psum_scatter", "hier_a2a",
+              "compressed_reduce", "topk_reduce", "overlap_a2a")
+CONTEXTS = {a.name: a for a in build_contexts(production=False)}
+
+
+def _check(name: str, actx: AuditContext):
+    strat = get_strategy(name)
+    exact_sigs = {}
+    for n in STRATEGIES:
+        tr = trace_strategy(get_strategy(n), actx.ctx, actx.axis_sizes)
+        if not tr.stateful:
+            from repro.analysis.trace import signature_multiset
+            exact_sigs[n] = signature_multiset(tr.reduce)
+    return check_strategy(strat, actx.ctx, actx.axis_sizes,
+                          context_name=actx.name,
+                          exact_reduce_sigs=exact_sigs)
+
+
+@pytest.mark.parametrize("ctx_name", ["1dev", "pod8", "multipod"])
+@pytest.mark.parametrize("name", STRATEGIES)
+def test_registered_strategies_pass_audit(name, ctx_name):
+    """Every built-in passes every rule on every analytic geometry."""
+    tr, findings = _check(name, CONTEXTS[ctx_name])
+    assert tr is not None
+    assert findings == [], findings
+
+
+@pytest.mark.parametrize("name", STRATEGIES)
+def test_declared_wire_matches_extracted(name):
+    """The declared WireBytes equals the jaxpr-extracted bytes on both
+    tiers — the audit's central cross-check, asserted directly."""
+    actx = CONTEXTS["multipod"]
+    tr = trace_strategy(get_strategy(name), actx.ctx, actx.axis_sizes)
+    extracted = wire_total(tr.distribute + tr.reduce, actx.axis_sizes,
+                           actx.ctx.outer_axes)
+    declared = get_strategy(name).bytes_per_device(actx.ctx)
+    assert (declared.inner, declared.outer) == (
+        extracted.inner, extracted.outer), (name, declared, extracted)
+
+
+# ---------------------------------------------------------------------------
+# deliberately-wrong strategies must be rejected
+# ---------------------------------------------------------------------------
+
+
+class _SelfCountingWire(AllToAllStrategy):
+    """Legacy drift: counts its own chunk as received wire bytes."""
+
+    def bytes_per_device(self, ctx):
+        pi = ctx.inner_shards
+        return WireBytes(inner=3 * pi * ctx.capacity * 4,
+                         outer=3 * (ctx.num_shards - pi) * ctx.capacity * 4)
+
+
+class _NoOuterTier(AllToAllStrategy):
+    """Claims a multi-pod exchange never crosses DCN."""
+
+    def bytes_per_device(self, ctx):
+        return WireBytes(
+            inner=3 * (ctx.num_shards - 1) * ctx.capacity * 4, outer=0)
+
+
+class _NoAccumulateFallback(TopKReduceStrategy):
+    """Ignores fwd["accumulate"]: sparsifies and advances the carry on the
+    full-batch accumulation path too."""
+
+    def reduce(self, ctx, cold_loc, grads_flat, fwd):
+        return super().reduce(ctx, cold_loc, grads_flat,
+                              {**fwd, "accumulate": False})
+
+
+@pytest.fixture
+def scratch_registry():
+    """Register test strategies, guaranteed unregistered afterwards."""
+    added = []
+
+    def add(name, strategy):
+        register_strategy(name, strategy)
+        added.append(name)
+        return get_strategy(name)
+
+    try:
+        yield add
+    finally:
+        for name in added:
+            _REGISTRY.pop(name, None)
+
+
+def _rules(findings):
+    return {f.rule for f in findings}
+
+
+def test_bad_wire_model_rejected(scratch_registry):
+    strat = scratch_registry("_bad_wire", _SelfCountingWire())
+    _, findings = _check("_bad_wire", CONTEXTS["pod8"])
+    assert "W-MATCH" in _rules(findings), findings
+    # and the good strategy it shadows still passes, same geometry
+    assert strat.bytes_per_device(CONTEXTS["pod8"].ctx).inner > \
+        get_strategy("a2a").bytes_per_device(CONTEXTS["pod8"].ctx).inner
+
+
+def test_missing_outer_tier_rejected(scratch_registry):
+    scratch_registry("_no_outer", _NoOuterTier())
+    _, findings = _check("_no_outer", CONTEXTS["multipod"])
+    rules = _rules(findings)
+    assert "W-OUTER" in rules, findings
+    # single-pod contexts cannot see this lie
+    _, findings_1pod = _check("_no_outer", CONTEXTS["pod8"])
+    assert "W-OUTER" not in _rules(findings_1pod)
+
+
+def test_missing_accumulate_fallback_rejected(scratch_registry):
+    scratch_registry("_no_acc", _NoAccumulateFallback())
+    _, findings = _check("_no_acc", CONTEXTS["pod8"])
+    rules = _rules(findings)
+    # the carry is mutated on the frozen path AND the collective pattern
+    # no longer matches any exact strategy's reduce
+    assert "A-FREEZE" in rules, findings
+    assert "A-EXACT" in rules, findings
+
+
+def test_audit_registry_fails_on_miswired_strategy(scratch_registry):
+    scratch_registry("_bad_wire", _SelfCountingWire())
+    report = audit_registry(engine_checks=False,
+                            contexts=[CONTEXTS["pod8"]])
+    assert not report["ok"]
+    assert any(f["strategy"] == "_bad_wire" for f in report["findings"])
+    # the built-ins stay clean even in a failing report
+    assert all(f["strategy"] == "_bad_wire" for f in report["findings"])
+
+
+def test_audit_registry_report_shape():
+    report = audit_registry(strategies=["a2a", "topk_reduce"],
+                            contexts=[CONTEXTS["multipod"]],
+                            engine_checks=False)
+    assert report["ok"] and report["num_findings"] == 0
+    entry = report["strategies"]["a2a"]["multipod"]
+    assert entry["declared"] == entry["extracted"]
+    assert entry["collectives"]["distribute"]
+    assert report["strategies"]["topk_reduce"]["multipod"]["stateful"]
+
+
+# ---------------------------------------------------------------------------
+# wire attribution math
+# ---------------------------------------------------------------------------
+
+
+def _coll(prim, axes, shape, dtype="float32", out_shape=None):
+    return Collective(prim=prim, axes=axes, shapes=(shape,),
+                      dtypes=(dtype,), out_shapes=(out_shape or shape,),
+                      out_dtypes=(dtype,))
+
+
+def test_collective_wire_tier_attribution():
+    sizes = {"pod": 2, "data": 4}
+    outer = ("pod",)
+    # all_to_all over both axes: 8 chunks of 16 f32 rows each = 64B/chunk;
+    # 3 inner peers, 4 cross-pod peers
+    a2a = _coll("all_to_all", ("pod", "data"), (8, 16))
+    assert collective_wire(a2a, sizes, outer) == WireBytes(
+        inner=3 * 64, outer=4 * 64)
+    # all_gather over pod only: one remote pod's whole buffer crosses DCN
+    ag = _coll("all_gather", ("pod",), (128,))
+    assert collective_wire(ag, sizes, outer) == WireBytes(
+        inner=0, outer=128 * 4)
+    # reduce_scatter counts RESULT-sized chunks per peer
+    rs = _coll("reduce_scatter", ("data",), (64,), out_shape=(16,))
+    assert collective_wire(rs, sizes, outer) == WireBytes(
+        inner=3 * 16 * 4, outer=0)
+    # degenerate single-participant group: nothing moves
+    solo = _coll("all_to_all", ("pod",), (2, 4))
+    assert collective_wire(solo, {"pod": 1}, ()) == WireBytes(0, 0)
+
+
+def test_unmodeled_collective_raises():
+    from repro.analysis.wire import UnmodeledCollectiveError
+
+    weird = _coll("psum[grouped]", ("data",), (8,))
+    with pytest.raises(UnmodeledCollectiveError):
+        collective_wire(weird, {"data": 4}, ())
+    missing_axis = _coll("all_gather", ("ghost",), (8,))
+    with pytest.raises(UnmodeledCollectiveError):
+        collective_wire(missing_axis, {"data": 4}, ())
+
+
+# ---------------------------------------------------------------------------
+# signature pinning: the extracted collective pattern per strategy
+# ---------------------------------------------------------------------------
+
+# (prim, axes) multiset each strategy's distribute+reduce emits on the
+# (2, 4) multi-pod geometry. If a strategy's exchange structure changes,
+# this pins the review: update BOTH the strategy's wire model and this
+# table, and re-run `python -m repro.analysis.audit`.
+PINNED_MULTIPOD_OPS = {
+    "a2a": [("all_to_all", ("pod", "data"))] * 3,
+    "allgather": [("all_gather", ("pod", "data")),
+                  ("reduce_scatter", ("pod", "data"))],
+    "psum_scatter": [("all_to_all", ("pod", "data"))] * 2
+    + [("reduce_scatter", ("pod", "data"))],
+    "hier_a2a": [("all_gather", ("pod",))]
+    + [("all_to_all", ("data",))] * 3
+    + [("reduce_scatter", ("pod",))],
+    "compressed_reduce": [("all_to_all", ("pod", "data"))] * 4,
+    "topk_reduce": [("all_to_all", ("pod", "data"))] * 4,
+    "overlap_a2a": [("all_to_all", ("pod", "data"))] * 12,
+}
+
+
+@pytest.mark.parametrize("name", STRATEGIES)
+def test_pinned_collective_signatures(name):
+    actx = CONTEXTS["multipod"]
+    tr = trace_strategy(get_strategy(name), actx.ctx, actx.axis_sizes)
+    got = sorted((c.prim, c.axes) for c in tr.distribute + tr.reduce)
+    assert got == sorted(PINNED_MULTIPOD_OPS[name]), (name, got)
+
+
+def test_stateful_accumulate_path_is_exact():
+    """The frozen-carry path puts only f32/int32 on the wire and returns
+    the carry variable itself (jaxpr-level identity, not value
+    comparison)."""
+    actx = CONTEXTS["pod8"]
+    for name in ("compressed_reduce", "topk_reduce"):
+        tr = trace_strategy(get_strategy(name), actx.ctx, actx.axis_sizes)
+        assert tr.stateful and tr.carry_passthrough, name
+        assert set(tr.wire_dtypes_accumulate) <= {"float32", "int32"}, name
+
+
+def test_contexts_cover_required_geometries():
+    """The audit's default contexts include the single-device, single-pod,
+    multi-pod, and production geometries the acceptance criteria name."""
+    names = {a.name for a in build_contexts()}
+    assert {"1dev", "pod8", "multipod", "production"} <= names
+    prod = {a.name: a for a in build_contexts()}["production"]
+    assert prod.ctx.num_shards == 512 and prod.ctx.outer_shards == 2
+    assert prod.axis_sizes == {"pod": 2, "data": 16, "model": 16}
+
+
+def test_registry_covers_all_builtins():
+    assert set(STRATEGIES) <= set(list_strategies())
+
+
+@pytest.mark.slow
+def test_full_audit_passes_including_engine():
+    """End-to-end: the shipped registry + engine seam is clean (the same
+    gate `scripts/check.sh` runs via `python -m repro.analysis.audit`)."""
+    report = audit_registry()
+    assert report["ok"], report["findings"]
+    eng = report["engine"]
+    assert any("donation" in c for c in eng["checks"])
+    assert any("resets the carry" in c for c in eng["checks"])
+
+
+def test_batch_elems_never_clamps_hier_capacity():
+    """Tracing batch size keeps hier_a2a's inner capacity at cap*Po (the
+    unclamped regime the wire models are stated for)."""
+    from repro.analysis.trace import batch_elems
+
+    ctx = CONTEXTS["multipod"].ctx
+    n = batch_elems(ctx)
+    assert n >= ctx.capacity * ctx.outer_shards
+    hier = get_strategy("hier_a2a")
+    assert hier._inner_capacity(ctx, n) == \
+        ctx.capacity * ctx.outer_shards
+
+
+def test_wire_total_sums_both_tiers():
+    sizes = {"pod": 2, "data": 4}
+    ops = [_coll("all_to_all", ("pod", "data"), (8, 16)),
+           _coll("all_gather", ("pod",), (128,))]
+    total = wire_total(ops, sizes, ("pod",))
+    assert total == WireBytes(inner=3 * 64, outer=4 * 64 + 512)
+    assert jnp.asarray(total.total).item() == total.inner + total.outer

@@ -1,6 +1,8 @@
 """Data-plane tests: source registry, built-in source equivalence, file
 corpus roundtrip, ShardedLoader (conformance, host sharding, prefetch,
 cursors), and resume-exactness through engine save/restore."""
+import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -174,7 +176,7 @@ def test_loader_prefetch_stream_identical():
     mesh = make_host_mesh(1, 1)
     sync = ShardedLoader(_zipf(num_batches=4), mesh, prefetch=0).take(7)
     pre = ShardedLoader(_zipf(num_batches=4), mesh, prefetch=3).take(7)
-    for a, b in zip(sync, pre):
+    for a, b in zip(sync, pre, strict=True):
         _assert_batches_equal(a, b)
 
 
@@ -301,7 +303,7 @@ def test_shuffle_is_deterministic_and_seeded():
     mesh = make_host_mesh(1, 1)
     a = ShardedLoader(_zipf(num_batches=6), mesh, prefetch=0, shuffle=True)
     b = ShardedLoader(_zipf(num_batches=6), mesh, prefetch=0, shuffle=True)
-    for x, y in zip(a.take(8), b.take(8)):
+    for x, y in zip(a.take(8), b.take(8), strict=True):
         _assert_batches_equal(x, y)
     fresh = ShardedLoader(_zipf(num_batches=6), mesh, prefetch=0,
                           shuffle=True)
@@ -330,7 +332,7 @@ def test_shuffle_seek_reproduces_stream():
     jumped = ShardedLoader(_zipf(num_batches=5), mesh, prefetch=2,
                            shuffle=True)
     jumped.seek(Cursor(1, 3))
-    for want, got in zip(full[8:], jumped.take(4)):
+    for want, got in zip(full[8:], jumped.take(4), strict=True):
         _assert_batches_equal(want, got)
 
 
@@ -361,7 +363,7 @@ def test_shuffle_resume_exactness_zipf(tmp_path):
     resumed_hist = resumed.fit_sgd(resumed_loader, steps=4)
 
     assert part_hist + resumed_hist == full_hist
-    for a, b in zip(full.state, resumed.state):
+    for a, b in zip(full.state, resumed.state, strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
@@ -422,7 +424,7 @@ def test_resume_exactness_sparse(kind, tmp_path):
     # numbering (fit_sgd continues from the restored state.step)
     assert part_hist + resumed_hist == full_hist
     # state bit-identical
-    for a, b in zip(full.state, resumed.state):
+    for a, b in zip(full.state, resumed.state, strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
@@ -442,7 +444,7 @@ def test_resume_exactness_dense_stream():
 
     resumed = lm_loader()
     resumed.load_state_dict(saved)
-    for want, got in zip(full[4:], resumed.take(3)):
+    for want, got in zip(full[4:], resumed.take(3), strict=True):
         _assert_batches_equal(want, got)
 
 
@@ -621,7 +623,9 @@ def test_fit_rewinds_mid_epoch_cursor_to_full_pass():
     loader = ShardedLoader(_zipf(batch_size=128, num_batches=4), mesh)
     a = DPMREngine(_cfg(iterations=1), mesh)
     a.fit_sgd(loader, steps=2)              # cursor now (0, 2)
-    pre_sgd_state = a.state
+    # snapshot by COPY: the engine's updating steps donate their input
+    # state, so a bare reference dies with the next fit/train_step
+    pre_sgd_state = jax.tree.map(jnp.copy, a.state)
     a.fit(loader)
     b = DPMREngine(_cfg(iterations=1), mesh, state=pre_sgd_state)
     b.fit(ShardedLoader(_zipf(batch_size=128, num_batches=4), mesh))

@@ -271,21 +271,23 @@ def test_classify_probabilities_valid():
 
 def test_bytes_per_device_two_tier_contract():
     """Every registered built-in returns WireBytes; on a single-tier
-    geometry nothing crosses DCN and the totals match the legacy scalar
-    models; inner + outer == total always."""
+    geometry nothing crosses DCN and the totals match the received-bytes
+    models ((P-1) peers — a device's own chunk never travels);
+    inner + outer == total always."""
     p, cap, block = 256, 64, 1 << 14
     flat = StrategyContext(axes=(), num_shards=p, block_size=block,
                            capacity=cap)
-    legacy = {"a2a": 3 * p * cap * 4,
-              "allgather": 2 * block * (p - 1) * 4,
-              "psum_scatter": 2 * p * cap * 4 + block * (p - 1) * 4}
+    received = {"a2a": 3 * (p - 1) * cap * 4,
+                "allgather": 2 * block * (p - 1) * 4,
+                "psum_scatter": 2 * (p - 1) * cap * 4
+                + block * (p - 1) * 4}
     for name in list_strategies():
         wb = get_strategy(name).bytes_per_device(flat)
         assert isinstance(wb, WireBytes), name
         assert wb.outer == 0, (name, wb)
         assert wb.total == wb.inner + wb.outer
-        if name in legacy:
-            assert wb.total == legacy[name], (name, wb)
+        if name in received:
+            assert wb.total == received[name], (name, wb)
 
 
 def test_hier_a2a_crosses_dcn_with_fewer_bytes():
@@ -374,7 +376,7 @@ def test_compressed_reduce_carry_checkpoint_roundtrip(tmp_path):
     np.testing.assert_array_equal(np.asarray(part.state.strat),
                                   np.asarray(resumed.state.strat))
     resumed.fit_sgd(iter(batches[3:]))
-    for a, b in zip(full.state, resumed.state):
+    for a, b in zip(full.state, resumed.state, strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
@@ -506,7 +508,7 @@ def test_topk_carry_checkpoint_roundtrip(tmp_path):
     np.testing.assert_array_equal(np.asarray(part.state.strat),
                                   np.asarray(resumed.state.strat))
     resumed.fit_sgd(iter(batches[3:]))
-    for a, b in zip(full.state, resumed.state):
+    for a, b in zip(full.state, resumed.state, strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
@@ -558,7 +560,7 @@ def test_topk_selection_helpers_oracle():
             [k] * 5
         np.testing.assert_array_equal(
             mask, np.asarray(compression.topk_mask(x, k)))
-        for row, irow, mrow in zip(np.asarray(x), idx, mask):
+        for row, irow, mrow in zip(np.asarray(x), idx, mask, strict=True):
             top = set(sorted(row, reverse=True)[:k])
             assert set(row[mrow]) == top == set(row[irow])
 
@@ -581,7 +583,7 @@ def test_topk_and_overlap_wire_models():
         # forward legs match a2a's 2 buffers; reduce leg is k (val, id)
         # pairs per peer on each tier
         pi = ctx.inner_shards
-        assert topk.inner == 2 * pi * cap * 4 + pi * k * 8
+        assert topk.inner == 2 * (pi - 1) * cap * 4 + (pi - 1) * k * 8
         assert topk.outer == 2 * (p - pi) * cap * 4 + (p - pi) * k * 8
         assert topk.total < a2a.total
 
@@ -645,7 +647,7 @@ def test_engine_save_restore_roundtrip(tmp_path):
     eng2 = DPMREngine(cfg, mesh)
     manifest = eng2.restore(str(tmp_path))
     assert manifest["extra"]["kind"] == "dpmr_sparse"
-    for a, b in zip(eng.state, eng2.state):
+    for a, b in zip(eng.state, eng2.state, strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     # training continues identically from the restored state
     batch = sparse_corpus.make_batch(SPEC, 128, seed=99)

@@ -240,7 +240,7 @@ def test_shuffle_ownership_seek_reproduces_stream(tmp_path):
     full = _file_loader(d, 1, 2, shuffle=True, prefetch=2).take(15)
     jumped = _file_loader(d, 1, 2, shuffle=True, prefetch=2)
     jumped.seek(Cursor(1, 4))
-    for want, got in zip(full[10:], jumped.take(5)):
+    for want, got in zip(full[10:], jumped.take(5), strict=True):
         for k in want:
             np.testing.assert_array_equal(want[k], got[k])
 
@@ -288,7 +288,7 @@ def test_resume_bit_exact_fixed_hosts_with_shuffle(tmp_path):
     part_hist = resumed.fit_sgd(resumed_loader, steps=6)
 
     assert full_hist[5:] == part_hist
-    for a, b in zip(full.state, resumed.state):
+    for a, b in zip(full.state, resumed.state, strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
