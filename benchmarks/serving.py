@@ -1,0 +1,252 @@
+"""Serving benchmark: coalescing latency/QPS, hot-cache hit rate, bucketing.
+
+Measures the serving tentpole end to end on the host mesh and emits
+`BENCH_serving.json` with the shared envelope (`name` / `config` /
+`results`):
+
+  parity        every coalesced, bucket-padded, cache-accelerated answer is
+                bit-identical to per-request `engine.predict` (asserted,
+                recorded as a boolean — the correctness floor under the
+                performance numbers)
+  hot_cache     DETERMINISTIC hit rate of the Zipf-head parameter cache on
+                a seeded trace processed sequentially (no threads, no
+                clocks): purely a function of the trace + cache config,
+                so it is the `primary_metric` the nightly regression gate
+                compares (latency/QPS are machine noise; hit rate is not)
+  latency_qps   p50/p99 request latency and sustained QPS over a
+                `max_wait_ms` x hot-cache on/off sweep with concurrent
+                clients — the knob-tradeoff table for docs/SERVING.md
+  bucketing     compiled `StepFns` entries with raw per-size `predict`
+                vs `predict_padded`'s power-of-two ladder on mixed request
+                sizes (the recompile-trap fix, counted not timed)
+
+    PYTHONPATH=src python benchmarks/serving.py
+    PYTHONPATH=src python benchmarks/serving.py --requests 64 --out /tmp
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import threading
+import time
+
+import numpy as np
+
+from repro.api import DPMREngine
+from repro.configs.base import DPMRConfig
+from repro.data import get_source
+from repro.launch.mesh import make_host_mesh
+from repro.serve import (BatchingConfig, DPMRServeEngine, HotCacheConfig,
+                         HotFeatureCache, ServeMetrics)
+
+F = 1 << 12
+K = 8
+
+
+def _engine(mesh, steps: int = 8) -> DPMREngine:
+    cfg = DPMRConfig(num_features=F, max_features_per_sample=K, max_hot=16)
+    eng = DPMREngine(cfg, mesh)
+    src = get_source("zipf_sparse", batch_size=16, num_batches=8,
+                     num_features=F, features_per_sample=K, seed=7)
+    eng.fit_sgd(src.iter_batches(), steps=steps)
+    return eng
+
+
+def _trace(n: int, request_size: int, seed: int):
+    src = get_source("zipf_sparse", batch_size=request_size, num_batches=n,
+                     num_features=F, features_per_sample=K, seed=seed)
+    return [src.batch(i) for i in range(n)]
+
+
+def bench_hot_cache(eng: DPMREngine, requests: int, request_size: int,
+                    hot_cfg: HotCacheConfig, seed: int = 0) -> dict:
+    """Sequential deterministic trace: observe + lookup each request once,
+    falling back to the sparse path on a miss (as the serve engine does).
+    Every hit is asserted bit-identical to `engine.predict`. Single-sample
+    requests by default: a hit needs EVERY feature of the request in the
+    mirror, so the hit rate reads as 'fraction of samples drawn entirely
+    from the cached Zipf head' — the paper's hot/cold premise, measured."""
+    cache = HotFeatureCache(eng, hot_cfg, ServeMetrics())
+    for req in _trace(requests, request_size, seed):
+        cache.observe(req["ids"])
+        got = cache.lookup(req["ids"], req["vals"])
+        ref = eng.predict(req)
+        if got is not None:
+            assert np.array_equal(got, ref), "cache hit must be bit-exact"
+    m = cache.metrics.snapshot()
+    hits = m.get("cache_hits", 0)
+    misses = m.get("cache_misses", 0)
+    return {
+        "trace_requests": requests,
+        "request_size": request_size,
+        "max_hot": hot_cfg.max_hot,
+        "window": hot_cfg.window,
+        "hits": hits,
+        "misses": misses,
+        "hit_rate": hits / max(hits + misses, 1),
+        "refreshes": m.get("cache_refreshes", 0),
+    }
+
+
+def bench_latency_qps(eng: DPMREngine, requests: int, request_size: int,
+                      clients: int, wait_ms_sweep, seed: int = 1) -> list:
+    rows = []
+    trace = _trace(requests, request_size, seed)
+    refs = [eng.predict(req) for req in trace]
+    for wait_ms in wait_ms_sweep:
+        for use_hot in (False, True):
+            hot = HotCacheConfig(max_hot=512, threshold=0.0, window=256,
+                                 refresh_every=4) if use_hot else None
+            srv = DPMRServeEngine(
+                eng, batching=BatchingConfig(max_batch=64,
+                                             max_wait_ms=wait_ms),
+                hot_cache=hot)
+            results: list = [None] * requests
+            srv.metrics.reset_clock()
+            t0 = time.perf_counter()
+
+            def client(lo, hi, results=results, srv=srv):
+                for i in range(lo, hi):
+                    results[i] = srv.submit(trace[i]["ids"],
+                                            trace[i]["vals"])
+
+            per = -(-requests // clients)
+            threads = [threading.Thread(
+                target=client, args=(c * per, min(requests, (c + 1) * per)))
+                for c in range(clients)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            probs = [np.asarray(f.result(timeout=300)) for f in results]
+            wall = time.perf_counter() - t0
+            srv.stop()
+            for got, ref in zip(probs, refs, strict=True):
+                assert np.array_equal(got, ref), \
+                    "coalesced serving must stay bit-exact"
+            m = srv.metrics_snapshot()
+            rows.append({
+                "max_wait_ms": wait_ms,
+                "hot_cache": use_hot,
+                "requests": requests,
+                "clients": clients,
+                "wall_s": round(wall, 4),
+                "qps": round(requests / max(wall, 1e-9), 1),
+                "latency_p50_ms": round(m.get("latency_p50_ms", 0.0), 3),
+                "latency_p99_ms": round(m.get("latency_p99_ms", 0.0), 3),
+                "flushes": m.get("flushes", 0),
+                "batch_mean": round(m.get("batch_mean", 0.0), 2),
+                "padding_frac": round(m.get("padding_frac", 0.0), 4),
+                "hot_hit_rate": round(m.get("hot_hit_rate", 0.0), 4),
+            })
+    return rows
+
+
+def bench_bucketing(mesh, sizes=(1, 2, 3, 4, 5, 6, 7, 8)) -> dict:
+    """Distinct compiled StepFns entries after serving mixed request sizes:
+    one per size without bucketing, one per ladder rung with. Counted on
+    fresh engines so the numbers are exact, not timed."""
+    src = get_source("zipf_sparse", batch_size=max(sizes), num_batches=1,
+                     num_features=F, features_per_sample=K, seed=2)
+    b = src.batch(0)
+
+    raw = _engine(mesh, steps=0)
+    trained = len(raw._fns)          # fit_sgd's own entry (none at steps=0)
+    for n in sizes:
+        raw.predict({"ids": b["ids"][:n], "vals": b["vals"][:n]})
+    unbucketed = len(raw._fns) - trained
+
+    padded = _engine(mesh, steps=0)
+    trained = len(padded._fns)
+    for n in sizes:
+        padded.predict_padded({"ids": b["ids"][:n], "vals": b["vals"][:n]})
+    bucketed = len(padded._fns) - trained
+
+    assert bucketed < unbucketed, (bucketed, unbucketed)
+    return {
+        "request_sizes": list(sizes),
+        "unbucketed_step_fns": unbucketed,
+        "bucketed_step_fns": bucketed,
+        "compile_reduction_x": round(unbucketed / bucketed, 3),
+    }
+
+
+def run(requests: int = 96, request_size: int = 4, clients: int = 8,
+        wait_ms_sweep=(0.5, 2.0, 8.0), write_json: bool = True,
+        out_dir: str = ".") -> dict:
+    mesh = make_host_mesh(1, 1)
+    eng = _engine(mesh)
+    # refresh_every=4: the mirror tracks the sliding window closely enough
+    # that the hit rate measures Zipf-head coverage, not refresh droop
+    hot_cfg = HotCacheConfig(max_hot=512, threshold=0.0, window=256,
+                             refresh_every=4)
+    results = {
+        "hot_cache": bench_hot_cache(eng, requests, 1, hot_cfg),
+        "latency_qps": bench_latency_qps(eng, requests, request_size,
+                                         clients, wait_ms_sweep),
+        "bucketing": bench_bucketing(mesh),
+    }
+    # parity is asserted inside both serving sections above; surface it as
+    # a recorded fact so the JSON states the correctness floor explicitly
+    results["parity"] = {
+        "bit_exact_vs_predict": True,
+        "requests_checked": requests * (1 + 2 * len(wait_ms_sweep)),
+    }
+    out = {
+        "name": "serving",
+        "config": {"num_features": F, "max_features_per_sample": K,
+                   "requests": requests, "request_size": request_size,
+                   "clients": clients, "wait_ms_sweep": list(wait_ms_sweep),
+                   "hot": {"max_hot": hot_cfg.max_hot,
+                           "window": hot_cfg.window,
+                           "threshold": hot_cfg.threshold,
+                           "refresh_every": hot_cfg.refresh_every},
+                   "hot_trace_request_size": 1},
+        # deterministic: a seeded trace processed sequentially — safe to
+        # regression-gate at 20% where latency/QPS would flag runner noise
+        "primary_metric": {"path": "results.hot_cache.hit_rate",
+                           "higher_is_better": True},
+        "results": results,
+    }
+    if write_json:
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(out_dir, "BENCH_serving.json")
+        with open(path, "w") as fh:
+            json.dump(out, fh, indent=2)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=96)
+    ap.add_argument("--request-size", type=int, default=4)
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--wait-ms", type=float, nargs="+",
+                    default=[0.5, 2.0, 8.0])
+    ap.add_argument("--out", default=".", help="BENCH_serving.json dir")
+    args = ap.parse_args()
+    out = run(requests=args.requests, request_size=args.request_size,
+              clients=args.clients, wait_ms_sweep=tuple(args.wait_ms),
+              out_dir=args.out)
+    hc = out["results"]["hot_cache"]
+    print(f"hot cache: hit rate {hc['hit_rate']:.3f} "
+          f"({hc['hits']}/{hc['hits'] + hc['misses']}), "
+          f"{hc['refreshes']} refreshes")
+    bk = out["results"]["bucketing"]
+    print(f"bucketing: {bk['unbucketed_step_fns']} -> "
+          f"{bk['bucketed_step_fns']} compiled step fns "
+          f"({bk['compile_reduction_x']}x)")
+    print(f"{'wait_ms':>8s} {'hot':>5s} {'p50_ms':>8s} {'p99_ms':>8s} "
+          f"{'qps':>8s} {'flushes':>8s} {'batch':>6s} {'hit%':>6s}")
+    for r in out["results"]["latency_qps"]:
+        print(f"{r['max_wait_ms']:>8.1f} {str(r['hot_cache']):>5s} "
+              f"{r['latency_p50_ms']:>8.2f} {r['latency_p99_ms']:>8.2f} "
+              f"{r['qps']:>8.1f} {r['flushes']:>8d} {r['batch_mean']:>6.1f} "
+              f"{r['hot_hit_rate']:>6.3f}")
+    print(f"wrote {os.path.join(args.out, 'BENCH_serving.json')}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

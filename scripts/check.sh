@@ -169,6 +169,44 @@ if bad:
 print('quickstart OK (no repro.* DeprecationWarnings)')
 "
 
+echo "== serving smoke (coalesced micro-batches bit-exact vs predict) =="
+t 300 python -c "
+import threading
+import numpy as np
+from repro.api import DPMREngine
+from repro.configs.base import DPMRConfig
+from repro.data import get_source
+from repro.launch.mesh import make_host_mesh
+from repro.serve import BatchingConfig, DPMRServeEngine, HotCacheConfig
+
+mesh = make_host_mesh(1, 1)
+cfg = DPMRConfig(num_features=1 << 10, max_features_per_sample=8)
+src = get_source('zipf_sparse', batch_size=4, num_batches=8,
+                 num_features=1 << 10, features_per_sample=8, seed=0)
+eng = DPMREngine(cfg, mesh)
+eng.fit_sgd(src.iter_batches(), steps=4)
+srv = DPMRServeEngine(
+    eng, batching=BatchingConfig(max_batch=16, max_wait_ms=2.0),
+    hot_cache=HotCacheConfig(max_hot=64, threshold=0.0, window=64,
+                             refresh_every=1000))
+reqs = [src.batch(i) for i in range(8)]
+futs = [None] * 8
+def client(lo, hi):
+    for i in range(lo, hi):
+        futs[i] = srv.submit(reqs[i]['ids'], reqs[i]['vals'])
+threads = [threading.Thread(target=client, args=(c * 4, c * 4 + 4))
+           for c in range(2)]
+[t.start() for t in threads]; [t.join() for t in threads]
+got = [np.asarray(f.result(timeout=120)) for f in futs]
+srv.stop()
+for req, g in zip(reqs, got):
+    assert np.array_equal(g, eng.predict(req)), 'serving must be bit-exact'
+m = srv.metrics_snapshot()
+assert m['requests'] == 8 and m['flushes'] >= 1, m
+print(f'serving OK: 8 requests, {m[\"flushes\"]} flushes, '
+      f'{m.get(\"cache_hits\", 0)} cache hits, bit-exact vs predict')
+"
+
 echo "== tier-1 tests (fast; -m 'not slow') =="
 # must stay under CI's 15-minute job cap so a hang fails HERE with a
 # section-level diagnostic, not as a generic job timeout (~7 min healthy)

@@ -301,12 +301,65 @@ class DPMREngine:
     # -- inference ----------------------------------------------------------
 
     def predict(self, batch: dict) -> np.ndarray:
-        """Algorithm 9: probabilities for a test batch ({ids, vals})."""
+        """Algorithm 9: probabilities for a test batch ({ids, vals}).
+
+        Compiles (and LRU-caches) StepFns for this EXACT batch size — ad-hoc
+        caller-shaped batches each cost a compilation and can thrash the
+        cache under mixed request sizes. Serving paths should use
+        `predict_padded`, which pads to a small ladder of bucketed sizes so
+        the cache gets hits instead of recompiles."""
         fns = self.step_fns(len(batch["ids"]))
         with compat.set_mesh(self.mesh):
             probs = fns.predict(self.state, self.put_batch(
                 {k: batch[k] for k in ("ids", "vals")}))
         return np.asarray(probs)
+
+    def bucket_for(self, n: int, buckets: Iterable[int] | None = None) -> int:
+        """The padded batch size `predict_padded` would run `n` rows at.
+
+        Default ladder: the smallest power-of-two multiple of the mesh shard
+        count P that holds `n` (P, 2P, 4P, ...) — at most log2(max_batch)
+        distinct compilations ever. An explicit `buckets` ladder must be
+        multiples of P; `n` above the largest bucket is an error (split the
+        batch instead of silently compiling an unplanned size)."""
+        p = dpmr.num_shards(self.mesh)
+        if n <= 0:
+            raise ValueError(f"batch size must be positive: {n}")
+        if buckets is None:
+            return p * (1 << (-(-n // p) - 1).bit_length())
+        for b in sorted(set(buckets)):
+            if b % p:
+                raise ValueError(
+                    f"bucket {b} is not a multiple of the mesh shard "
+                    f"count {p}")
+            if b >= n:
+                return b
+        raise ValueError(
+            f"batch of {n} rows exceeds the largest bucket in "
+            f"{sorted(set(buckets))}")
+
+    def predict_padded(self, batch: dict,
+                       buckets: Iterable[int] | None = None) -> np.ndarray:
+        """`predict` with the batch padded to a bucketed size, results
+        sliced back to the caller's rows.
+
+        Padding rows are empty samples (ids=-1, vals=0), which route nowhere
+        and add no owner load, so the first `n` probabilities are
+        bit-identical to `predict(batch)` — but every bucketed size hits the
+        per-batch-size StepFns LRU cache instead of compiling a fresh entry
+        per distinct request size. This is the serving predict path
+        (`repro.serve.DPMRServeEngine` coalesces requests into it)."""
+        ids = np.asarray(batch["ids"])
+        vals = np.asarray(batch["vals"])
+        n = len(ids)
+        b = self.bucket_for(n, buckets)
+        if b != n:
+            pad = b - n
+            ids = np.concatenate(
+                [ids, np.full((pad, ids.shape[1]), -1, ids.dtype)])
+            vals = np.concatenate(
+                [vals, np.zeros((pad, vals.shape[1]), vals.dtype)])
+        return self.predict({"ids": ids, "vals": vals})[:n]
 
     def evaluate(self, test_batches, *, spec: dict | None = None) -> dict:
         """Fig. 1 metrics: per-class precision/recall/F + macro average.

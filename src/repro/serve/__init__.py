@@ -1,0 +1,26 @@
+"""Sparse serving subsystem: resident parameters, micro-batched requests.
+
+    from repro.serve import (BatchingConfig, DPMRServeEngine,
+                             HotCacheConfig)
+
+`DPMRServeEngine` keeps a `DPMREngine`'s sharded state resident on the
+mesh and streams concurrent requests through deadline-coalesced,
+bucket-padded micro-batches (`serve/batching.py` +
+`DPMREngine.predict_padded`), with a host-side Zipf-head parameter cache
+(`serve/hot_cache.py`, built on `repro.core.hot_sharding`) answering
+head-only requests without touching the sparse exchange. Architecture and
+knob reference: docs/SERVING.md.
+"""
+from repro.serve.batching import BatchingConfig, MicroBatcher
+from repro.serve.engine import DPMRServeEngine
+from repro.serve.hot_cache import HotCacheConfig, HotFeatureCache
+from repro.serve.metrics import ServeMetrics
+
+__all__ = [
+    "BatchingConfig",
+    "DPMRServeEngine",
+    "HotCacheConfig",
+    "HotFeatureCache",
+    "MicroBatcher",
+    "ServeMetrics",
+]

@@ -1,0 +1,207 @@
+"""`DPMRServeEngine` — resident-parameter, micro-batched sparse serving.
+
+The paper's premise is that the parameter table is too large for one node
+and must stay DISTRIBUTED; serving must therefore keep the sharded
+`DPMRState` resident on the mesh and stream requests through the compiled
+predict step, instead of re-materializing parameters per call. This engine
+is that serving face:
+
+    from repro.serve import DPMRServeEngine
+
+    srv = DPMRServeEngine.from_checkpoint(cfg, mesh, "/ckpt/dir")
+    fut = srv.submit(ids, vals)          # (r, K) padded-CSR rows
+    probs = fut.result()                 # (r,) probabilities
+    srv.stop()                           # drains the queue
+
+Three layers under one object:
+
+  MicroBatcher       (serve/batching.py) a thread-safe queue + deadline-
+                     aware flusher: requests coalesce until `max_batch`
+                     rows or `max_wait_ms`, whichever first.
+  predict_padded     the flushed batch pads to a small ladder of bucketed
+                     sizes, so the per-batch-size `StepFns` LRU cache gets
+                     hits instead of recompiles under mixed request sizes.
+  HotFeatureCache    (serve/hot_cache.py) requests made entirely of
+                     Zipf-head features are answered from a host-mirrored
+                     dense slice and never enter the queue at all.
+
+Results come back as per-request futures, bit-identical to what
+`engine.predict` would return for the same rows (hot-cache hits included,
+while the mirror is fresh — see the staleness contract in
+serve/hot_cache.py). All counters live on one `ServeMetrics`
+(`srv.metrics_snapshot()`).
+
+During serving, the flusher thread is the only caller into the wrapped
+engine's compiled steps; don't train the same engine concurrently from
+another thread (train between `stop()`/`start()` instead — the hot cache
+notices the step change and refreshes itself).
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import time
+import warnings
+
+import numpy as np
+
+from repro.api.engine import DPMREngine
+from repro.ckpt.checkpointer import Checkpointer
+from repro.configs.base import DPMRConfig
+from repro.serve.batching import BatchingConfig, MicroBatcher
+from repro.serve.hot_cache import HotCacheConfig, HotFeatureCache
+from repro.serve.metrics import ServeMetrics
+
+
+class DPMRServeEngine:
+    """Resident-parameter serving over a live (or restored) `DPMREngine`.
+
+    Parameters
+    ----------
+    engine:     the wrapped `DPMREngine`; its sharded state stays resident
+                on the mesh for the lifetime of the server
+    batching:   `BatchingConfig` (max_batch / max_wait_ms / pad buckets)
+    hot_cache:  `HotCacheConfig`, or None to disable the Zipf-head fast
+                path entirely
+    start:      start the flusher immediately (default); with False, call
+                `start()` before submitting
+    """
+
+    def __init__(self, engine: DPMREngine, *,
+                 batching: BatchingConfig | None = None,
+                 hot_cache: HotCacheConfig | None = HotCacheConfig(),
+                 start: bool = True):
+        self.engine = engine
+        self.batching = batching or BatchingConfig()
+        self.metrics = ServeMetrics()
+        self._k = int(engine.cfg.max_features_per_sample)
+        self.cache = None if hot_cache is None else HotFeatureCache(
+            engine, hot_cache, self.metrics)
+        self._batcher = MicroBatcher(self._predict_flush, self.batching,
+                                     self.metrics)
+        if start:
+            self.start()
+
+    @classmethod
+    def from_checkpoint(cls, cfg: DPMRConfig, mesh, directory: str, *,
+                        step: int | None = None,
+                        **kw) -> "DPMRServeEngine":
+        """Restore-into-serving: build an engine on `mesh`, restore the
+        sparse checkpoint at `directory` into it, and serve it.
+
+        Fails loudly when pointed at a non-sparse checkpoint (e.g. a dense
+        LM checkpoint from `launch/train.py`) — the manifest must carry
+        `kind == "dpmr_sparse"`, which `DPMREngine.save` writes."""
+        ck = Checkpointer(directory)
+        at = ck.latest_step() if step is None else step
+        if at is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+        import json
+        import os
+        with open(os.path.join(directory, f"step_{at:010d}",
+                               "manifest.json")) as f:
+            kind = json.load(f).get("extra", {}).get("kind")
+        if kind != "dpmr_sparse":
+            raise ValueError(
+                f"{directory} step {at} is not a sparse DPMR checkpoint "
+                f"(manifest kind={kind!r}); the sparse serving engine "
+                "cannot serve a dense LM state — use the dense serve path "
+                "for that")
+        engine = DPMREngine(cfg, mesh)
+        with warnings.catch_warnings():
+            # serving never resumes the training data stream; the engine's
+            # "checkpoint carries a data cursor but no loader" warning is
+            # noise here (strategy/topk mismatch warnings still surface)
+            warnings.filterwarnings("ignore", message=".*data cursor.*",
+                                    category=RuntimeWarning)
+            engine.restore(directory, step=step)
+        return cls(engine, **kw)
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def start(self) -> "DPMRServeEngine":
+        self._batcher.start()
+        return self
+
+    def stop(self) -> None:
+        """Drain the queue (every accepted request is answered) and stop
+        the flusher. Idempotent; the engine state stays resident, so
+        `start()` serves again."""
+        self._batcher.stop()
+
+    def __enter__(self) -> "DPMRServeEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- request path -------------------------------------------------------
+
+    def submit(self, ids, vals) -> concurrent.futures.Future:
+        """Queue one request of (r, K') sparse rows; K' <= the engine's
+        max_features_per_sample (short rows are padded). Returns a Future
+        of the (r,) probabilities. Thread-safe."""
+        t0 = time.monotonic()
+        ids, vals = self._conform(ids, vals)
+        self.metrics.count("requests")
+        self.metrics.count("samples", len(ids))
+        if self.cache is not None:
+            self.cache.observe(ids)
+            probs = self.cache.lookup(ids, vals)
+            if probs is not None:
+                fut: concurrent.futures.Future = concurrent.futures.Future()
+                fut.set_result(probs)
+                self.metrics.record_latency(time.monotonic() - t0)
+                return fut
+        return self._batcher.submit(ids, vals)
+
+    def predict(self, batch: dict) -> np.ndarray:
+        """Synchronous convenience: submit the batch as ONE request (it
+        still coalesces with concurrent traffic) and wait for its result."""
+        return np.asarray(self.submit(batch["ids"], batch["vals"]).result())
+
+    def _conform(self, ids, vals) -> tuple[np.ndarray, np.ndarray]:
+        ids = np.asarray(ids, np.int32)
+        vals = np.asarray(vals, np.float32)
+        if ids.ndim == 1:
+            ids, vals = ids[None, :], vals[None, :]
+        if ids.ndim != 2 or ids.shape != vals.shape:
+            raise ValueError(
+                f"request must be (rows, K) id/val pairs of one shape; got "
+                f"ids {ids.shape} vals {vals.shape}")
+        k = ids.shape[1]
+        if k > self._k:
+            raise ValueError(
+                f"request has {k} features per sample but the engine "
+                f"compiled for max_features_per_sample={self._k}")
+        if k < self._k:
+            pad = self._k - k
+            ids = np.concatenate(
+                [ids, np.full((len(ids), pad), -1, np.int32)], axis=1)
+            vals = np.concatenate(
+                [vals, np.zeros((len(vals), pad), np.float32)], axis=1)
+        return ids, vals
+
+    # -- flusher side -------------------------------------------------------
+
+    def _predict_flush(self, ids: np.ndarray,
+                       vals: np.ndarray) -> np.ndarray:
+        """The MicroBatcher's predict_fn: one coalesced micro-batch through
+        the bucket-padded compiled step (flusher thread only)."""
+        n = len(ids)
+        self.metrics.record_flush(
+            n, self.engine.bucket_for(n, self.batching.buckets))
+        return self.engine.predict_padded({"ids": ids, "vals": vals},
+                                          self.batching.buckets)
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def queue_depth(self) -> int:
+        return self._batcher.queue_depth
+
+    def metrics_snapshot(self) -> dict:
+        """Counters + latency percentiles + cache/batching stats, plus the
+        engine-side compiled-entry count (the recompile-trap gauge)."""
+        out = self.metrics.snapshot()
+        out["compiled_step_fns"] = len(self.engine._fns)
+        return out

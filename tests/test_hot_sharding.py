@@ -1,0 +1,230 @@
+"""`core/hot_sharding.py` unit tests + serving hot-cache correctness.
+
+The hot-sharding primitives (feature_counts / select_hot / split_hot /
+load_imbalance) were consumer-less until the serving subsystem; this file
+pins their semantics directly, then asserts the serving-facing contract of
+`repro.serve.hot_cache`: a cached hit is BIT-IDENTICAL to the uncached
+sparse predict while the mirror is fresh, and the staleness bound forces a
+refresh (never serving stale parameter values after training moved on).
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import DPMREngine, hot_ids_from_corpus
+from repro.configs.base import DPMRConfig
+from repro.core import hot_sharding
+from repro.data import get_source
+from repro.launch.mesh import make_host_mesh
+from repro.serve import HotCacheConfig, HotFeatureCache, ServeMetrics
+
+INT_MAX = hot_sharding.INT_MAX
+F = 1 << 10
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+
+def test_feature_counts_histogram():
+    ids = jnp.asarray([[0, 1, 1], [2, -1, 1]], jnp.int32)
+    counts = np.asarray(hot_sharding.feature_counts(ids, 4))
+    assert counts.tolist() == [1, 3, 1, 0]
+
+
+def test_feature_counts_drops_padding_only():
+    ids = jnp.asarray([-1, -1, 3], jnp.int32)
+    counts = np.asarray(hot_sharding.feature_counts(ids, 4))
+    assert counts.sum() == 1 and counts[3] == 1
+
+
+def test_feature_counts_any_shape():
+    flat = jnp.arange(6, dtype=jnp.int32)
+    assert np.array_equal(
+        np.asarray(hot_sharding.feature_counts(flat, 8)),
+        np.asarray(hot_sharding.feature_counts(flat.reshape(2, 3), 8)))
+
+
+def test_select_hot_threshold_and_sorting():
+    counts = jnp.asarray([10, 0, 5, 1], jnp.int32)    # total 16
+    ids = np.asarray(hot_sharding.select_hot(counts, 0.3, 3))
+    # freq >= 0.3 keeps features 0 (0.625) and 2 (0.3125) only
+    assert ids.tolist() == [0, 2, INT_MAX]
+
+
+def test_select_hot_max_hot_cap():
+    counts = jnp.asarray([4, 3, 2, 1], jnp.int32)
+    ids = np.asarray(hot_sharding.select_hot(counts, 0.0, 2))
+    assert ids.tolist() == [0, 1]        # two largest counts, sorted
+
+
+def test_select_hot_zero_count_never_selected():
+    counts = jnp.zeros((4,), jnp.int32).at[1].set(2)
+    ids = np.asarray(hot_sharding.select_hot(counts, 0.0, 4))
+    assert ids.tolist() == [1, INT_MAX, INT_MAX, INT_MAX]
+
+
+def test_select_hot_nothing_eligible():
+    counts = jnp.asarray([1, 1], jnp.int32)
+    ids = np.asarray(hot_sharding.select_hot(counts, 0.9, 2))
+    assert ids.tolist() == [INT_MAX, INT_MAX]
+
+
+def test_split_hot_partition():
+    hot_ids = jnp.asarray([2, 5] + [INT_MAX] * 2, jnp.int32)
+    flat = jnp.asarray([2, 3, 5, -1], jnp.int32)
+    slot, is_hot, cold = (np.asarray(a) for a in
+                          hot_sharding.split_hot(flat, hot_ids))
+    assert is_hot.tolist() == [True, False, True, False]
+    assert slot.tolist() == [0, -1, 1, -1]
+    assert cold.tolist() == [-1, 3, -1, -1]
+
+
+def test_split_hot_roundtrips_every_id():
+    # every input id is either hot (slot >= 0) or cold (cold >= 0) or
+    # padding — never two of the three
+    hot_ids = jnp.asarray([1, 4, 7, INT_MAX], jnp.int32)
+    flat = jnp.asarray([0, 1, 2, 4, 6, 7, -1, 9], jnp.int32)
+    slot, is_hot, cold = (np.asarray(a) for a in
+                          hot_sharding.split_hot(flat, hot_ids))
+    for i, f in enumerate(np.asarray(flat)):
+        if f < 0:
+            assert not is_hot[i] and cold[i] == -1
+        elif is_hot[i]:
+            assert cold[i] == -1 and np.asarray(hot_ids)[slot[i]] == f
+        else:
+            assert cold[i] == f and slot[i] == -1
+
+
+def test_load_imbalance_uniform_vs_skewed():
+    # 4 shards x block 2: one id per owner -> perfectly balanced
+    even = jnp.asarray([0, 2, 4, 6], jnp.int32)
+    assert float(hot_sharding.load_imbalance(even, 4, 2)) == 1.0
+    # all ids on owner 0 -> max/mean = num_shards
+    skew = jnp.asarray([0, 1, 0, 1], jnp.int32)
+    assert float(hot_sharding.load_imbalance(skew, 4, 2)) == 4.0
+
+
+def test_load_imbalance_ignores_padding():
+    ids = jnp.asarray([0, 2, 4, 6, -1, -1], jnp.int32)
+    assert float(hot_sharding.load_imbalance(ids, 4, 2)) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# serving hot cache
+# ---------------------------------------------------------------------------
+
+
+def _trained_engine(max_hot=16, steps=8):
+    mesh = make_host_mesh(1, 1)
+    cfg = DPMRConfig(num_features=F, max_features_per_sample=8,
+                     max_hot=max_hot, hot_threshold=0.001)
+    src = get_source("zipf_sparse", batch_size=8, num_batches=8,
+                     num_features=F, features_per_sample=8, seed=3)
+    # a real model-hot set, so the cache mirror must gather from BOTH the
+    # replicated hot table and the sharded cold table
+    hot = hot_ids_from_corpus(cfg, src.iter_batches(limit=4), mesh)
+    eng = DPMREngine(cfg, mesh, hot_ids=hot)
+    eng.fit_sgd(src.iter_batches(), steps=steps)
+    return eng, src
+
+
+def _request(src, i):
+    b = src.batch(i)
+    return b["ids"], b["vals"]
+
+
+def test_cached_hit_bit_identical_to_sparse_path():
+    eng, src = _trained_engine()
+    cache = HotFeatureCache(eng, HotCacheConfig(max_hot=64, threshold=0.0,
+                                                window=64,
+                                                refresh_every=1000),
+                            ServeMetrics())
+    ids, vals = _request(src, 0)
+    # make every feature of the request window-hot (threshold 0 selects
+    # anything observed; 64 slots cover the <=64 distinct ids)
+    cache.observe(ids)
+    got = cache.lookup(ids, vals)
+    assert got is not None, "fully-observed request must hit"
+    ref = eng.predict({"ids": ids, "vals": vals})
+    np.testing.assert_array_equal(got, ref)   # bit-exact, not approx
+    assert cache.metrics.snapshot()["cache_hits"] == 1
+
+
+def test_unseen_feature_misses():
+    eng, src = _trained_engine()
+    cache = HotFeatureCache(eng, HotCacheConfig(max_hot=64, threshold=0.0,
+                                                window=64,
+                                                refresh_every=1000),
+                            ServeMetrics())
+    ids, vals = _request(src, 0)
+    cache.observe(ids)
+    cache.lookup(ids, vals)                   # builds the mirror
+    other = np.full_like(ids, -1)
+    other[0, 0] = (int(ids.max()) + 1) % F    # a feature never observed
+    assert cache.lookup(other, vals) is None
+    assert cache.metrics.snapshot()["cache_misses"] == 1
+
+
+def test_staleness_bound_forces_refresh():
+    eng, src = _trained_engine()
+    cache = HotFeatureCache(eng, HotCacheConfig(max_hot=64, threshold=0.0,
+                                                window=64, refresh_every=3),
+                            ServeMetrics())
+    ids, vals = _request(src, 0)
+    cache.observe(ids)
+    for _ in range(7):
+        assert cache.lookup(ids, vals) is not None
+    m = cache.metrics.snapshot()
+    # 7 lookups at refresh_every=3: initial gather + 2 staleness refreshes
+    assert m["cache_refreshes"] == 3
+    assert m["cache_stale_refreshes"] == 2
+    assert cache.staleness == 1               # one lookup since the last
+
+
+def test_step_change_refreshes_and_tracks_new_params():
+    eng, src = _trained_engine()
+    cache = HotFeatureCache(eng, HotCacheConfig(max_hot=64, threshold=0.0,
+                                                window=64,
+                                                refresh_every=1000),
+                            ServeMetrics())
+    ids, vals = _request(src, 0)
+    cache.observe(ids)
+    before = cache.lookup(ids, vals)
+    assert before is not None
+    # training moves the resident parameters; the mirror must notice the
+    # step change and re-gather BEFORE answering, not serve stale values
+    eng.fit_sgd(src.iter_batches(), steps=4)
+    after = cache.lookup(ids, vals)
+    assert after is not None
+    m = cache.metrics.snapshot()
+    assert m["cache_step_refreshes"] == 1
+    assert not np.array_equal(before, after), "params moved; so must probs"
+    np.testing.assert_array_equal(after,
+                                  eng.predict({"ids": ids, "vals": vals}))
+
+
+def test_window_eviction_drops_old_features():
+    eng, src = _trained_engine()
+    cache = HotFeatureCache(eng, HotCacheConfig(max_hot=64, threshold=0.0,
+                                                window=2, refresh_every=1),
+                            ServeMetrics())
+    ids0, vals0 = _request(src, 0)
+    ids1, vals1 = _request(src, 1)
+    cache.observe(ids0)
+    assert cache.lookup(ids0, vals0) is not None
+    # push two newer requests through a window of 2: ids0 falls out
+    cache.observe(ids1)
+    cache.observe(ids1)
+    only0 = set(np.unique(ids0[ids0 >= 0])) - set(np.unique(ids1[ids1 >= 0]))
+    if only0:    # zipf heads may overlap entirely; only assert when not
+        assert cache.lookup(ids0, vals0) is None
+
+
+def test_empty_window_never_hits():
+    eng, src = _trained_engine()
+    cache = HotFeatureCache(eng, HotCacheConfig(max_hot=8, threshold=0.0,
+                                                window=4, refresh_every=10),
+                            ServeMetrics())
+    ids, vals = _request(src, 0)
+    assert cache.lookup(ids, vals) is None    # nothing observed yet

@@ -1,0 +1,373 @@
+"""Serving subsystem lifecycle tests (`repro.serve`).
+
+Covers the acceptance claims of the serving tentpole: coalescing
+correctness (concurrent requests answer exactly what per-request
+`engine.predict` would), `predict_padded` bucket parity (the recompile-trap
+fix), deadline flush on a partial batch, clean queue drain on shutdown,
+restore-into-serving round-trip, and a `slow` 8-emulated-device run.
+"""
+import json
+import os
+import subprocess
+import sys
+import threading
+
+import numpy as np
+import pytest
+
+from repro.api import DPMREngine
+from repro.ckpt.checkpointer import Checkpointer
+from repro.configs.base import DPMRConfig
+from repro.data import get_source
+from repro.launch.mesh import make_host_mesh
+from repro.serve import (BatchingConfig, DPMRServeEngine, HotCacheConfig,
+                         MicroBatcher, ServeMetrics)
+
+F = 1 << 10
+K = 8
+
+
+@pytest.fixture(scope="module")
+def engine():
+    """One trained engine shared by the read-only serving tests (tests
+    that train further build their own)."""
+    mesh = make_host_mesh(1, 1)
+    cfg = DPMRConfig(num_features=F, max_features_per_sample=K, max_hot=16)
+    eng = DPMREngine(cfg, mesh)
+    eng.fit_sgd(_source().iter_batches(), steps=8)
+    return eng
+
+
+def _source(batch_size=4, num_batches=16, seed=0):
+    return get_source("zipf_sparse", batch_size=batch_size,
+                      num_batches=num_batches, num_features=F,
+                      features_per_sample=K, seed=seed)
+
+
+def _req(src, i):
+    b = src.batch(i)
+    return b["ids"], b["vals"]
+
+
+# ---------------------------------------------------------------------------
+# predict_padded: the recompile-trap fix
+# ---------------------------------------------------------------------------
+
+
+def test_predict_padded_bit_identical(engine):
+    src = _source(batch_size=5)
+    for n in (1, 2, 3, 5):
+        b = src.batch(0)
+        ids, vals = b["ids"][:n], b["vals"][:n]
+        padded = engine.predict_padded({"ids": ids, "vals": vals})
+        plain = engine.predict({"ids": ids, "vals": vals})
+        np.testing.assert_array_equal(padded, plain)   # bit-exact
+
+
+def test_predict_padded_reuses_bucketed_compilations(engine):
+    before = set(engine._fns)
+    src = _source(batch_size=8)
+    b = src.batch(0)
+    for n in (5, 6, 7, 8):                  # all bucket to 8
+        engine.predict_padded({"ids": b["ids"][:n], "vals": b["vals"][:n]})
+    new = set(engine._fns) - before
+    assert new <= {8}, f"sizes 5..8 must share the 8-row entry, got {new}"
+
+
+def test_bucket_for_default_ladder(engine):
+    assert [engine.bucket_for(n) for n in (1, 2, 3, 4, 5, 9)] == \
+        [1, 2, 4, 4, 8, 16]
+
+
+def test_bucket_for_explicit_and_errors(engine):
+    assert engine.bucket_for(3, buckets=(4, 16)) == 4
+    assert engine.bucket_for(5, buckets=(4, 16)) == 16
+    with pytest.raises(ValueError, match="largest bucket"):
+        engine.bucket_for(17, buckets=(4, 16))
+    with pytest.raises(ValueError, match="positive"):
+        engine.bucket_for(0)
+
+
+# ---------------------------------------------------------------------------
+# coalescing correctness
+# ---------------------------------------------------------------------------
+
+
+def test_concurrent_requests_match_sequential_predict(engine):
+    """K client threads through the coalescer == per-request predict."""
+    src = _source(num_batches=12, seed=1)
+    reqs = [_req(src, i) for i in range(12)]
+    results: list = [None] * len(reqs)
+    srv = DPMRServeEngine(engine,
+                          batching=BatchingConfig(max_batch=16,
+                                                  max_wait_ms=5.0),
+                          hot_cache=None)     # pure batcher path
+
+    def client(lo, hi):
+        for i in range(lo, hi):
+            results[i] = srv.submit(*reqs[i])
+
+    threads = [threading.Thread(target=client, args=(c * 4, c * 4 + 4))
+               for c in range(3)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    got = [np.asarray(f.result(timeout=120)) for f in results]
+    srv.stop()
+    for (ids, vals), g in zip(reqs, got, strict=True):
+        np.testing.assert_array_equal(
+            g, engine.predict({"ids": ids, "vals": vals}))
+    m = srv.metrics_snapshot()
+    assert m["requests"] == 12 and m["flushes"] >= 1
+
+
+def test_mixed_request_sizes_share_buckets(engine):
+    """Mixed sizes stay bit-correct AND don't compile one entry per size."""
+    srv = DPMRServeEngine(engine, batching=BatchingConfig(max_batch=8,
+                                                          max_wait_ms=1.0),
+                          hot_cache=None)
+    src = _source(batch_size=5, seed=2)
+    sizes = [1, 2, 3, 4, 5, 1, 3, 5]
+    futs = []
+    for i, n in enumerate(sizes):
+        b = src.batch(i)
+        futs.append(srv.submit(b["ids"][:n], b["vals"][:n]))
+    got = [np.asarray(f.result(timeout=120)) for f in futs]
+    srv.stop()
+    for i, (n, g) in enumerate(zip(sizes, got, strict=True)):
+        b = src.batch(i)
+        np.testing.assert_array_equal(
+            g, engine.predict_padded({"ids": b["ids"][:n],
+                                      "vals": b["vals"][:n]}))
+    # every flush padded to the power-of-two ladder {1,2,4,8}
+    assert all(s in (1, 2, 4, 8) for s in srv.metrics._flush_padded)
+
+
+def test_hot_cache_hits_inside_serve_engine(engine):
+    """End-to-end: a Zipf-head request short-circuits the queue and still
+    answers bit-identically."""
+    srv = DPMRServeEngine(
+        engine, batching=BatchingConfig(max_batch=8, max_wait_ms=1.0),
+        hot_cache=HotCacheConfig(max_hot=64, threshold=0.0, window=64,
+                                 refresh_every=1000))
+    src = _source(seed=3)
+    ids, vals = _req(src, 0)
+    first = np.asarray(srv.submit(ids, vals).result(timeout=120))
+    again = np.asarray(srv.submit(ids, vals).result(timeout=120))
+    srv.stop()
+    m = srv.metrics_snapshot()
+    assert m["cache_hits"] >= 1, m
+    np.testing.assert_array_equal(first, again)
+    np.testing.assert_array_equal(
+        first, engine.predict({"ids": ids, "vals": vals}))
+
+
+# ---------------------------------------------------------------------------
+# lifecycle: deadline, drain, stop
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_flush_fires_on_partial_batch(engine):
+    srv = DPMRServeEngine(engine,
+                          batching=BatchingConfig(max_batch=512,
+                                                  max_wait_ms=30.0),
+                          hot_cache=None)
+    src = _source(seed=4)
+    ids, vals = _req(src, 0)
+    probs = srv.submit(ids, vals).result(timeout=120)   # alone in the queue
+    assert probs.shape == (4,)
+    m = srv.metrics_snapshot()
+    srv.stop()
+    assert m["flush_deadline"] == 1 and m.get("flush_full", 0) == 0
+    assert m["batch_mean"] == 4.0       # partial: far below max_batch
+
+
+def test_full_flush_fires_on_max_batch(engine):
+    srv = DPMRServeEngine(engine,
+                          batching=BatchingConfig(max_batch=8,
+                                                  max_wait_ms=10_000.0),
+                          hot_cache=None)
+    src = _source(seed=5)
+    futs = [srv.submit(*_req(src, i)) for i in range(2)]   # 8 rows == full
+    for f in futs:
+        f.result(timeout=120)           # resolves long before the window
+    m = srv.metrics_snapshot()
+    srv.stop()
+    assert m["flush_full"] >= 1
+
+
+def test_stop_drains_pending_requests(engine):
+    """Queued requests are answered on shutdown, not dropped."""
+    srv = DPMRServeEngine(engine,
+                          batching=BatchingConfig(max_batch=1024,
+                                                  max_wait_ms=60_000.0),
+                          hot_cache=None)
+    src = _source(seed=6)
+    reqs = [_req(src, i) for i in range(3)]
+    futs = [srv.submit(*r) for r in reqs]
+    srv.stop()                          # drain: nobody waits out the hour
+    for (ids, vals), f in zip(reqs, futs, strict=True):
+        assert f.done()
+        np.testing.assert_array_equal(
+            np.asarray(f.result()),
+            engine.predict({"ids": ids, "vals": vals}))
+    assert srv.metrics_snapshot()["flush_drain"] >= 1
+
+
+def test_submit_after_stop_raises(engine):
+    srv = DPMRServeEngine(engine, hot_cache=None)
+    srv.stop()
+    src = _source(seed=7)
+    with pytest.raises(RuntimeError, match="stopped"):
+        srv.submit(*_req(src, 0))
+
+
+def test_stop_is_idempotent_and_restartable(engine):
+    srv = DPMRServeEngine(engine, hot_cache=None)
+    srv.stop()
+    srv.stop()
+    srv.start()                          # state stayed resident
+    src = _source(seed=8)
+    ids, vals = _req(src, 0)
+    np.testing.assert_array_equal(
+        np.asarray(srv.submit(ids, vals).result(timeout=120)),
+        engine.predict({"ids": ids, "vals": vals}))
+    srv.stop()
+
+
+def test_predict_fn_exception_fails_futures_not_queue():
+    calls = []
+
+    def boom(ids, vals):
+        calls.append(len(ids))
+        raise RuntimeError("kaboom")
+
+    with MicroBatcher(boom, BatchingConfig(max_batch=4, max_wait_ms=1.0),
+                      ServeMetrics()) as mb:
+        f1 = mb.submit(np.zeros((1, 4), np.int32), np.zeros((1, 4)))
+        with pytest.raises(RuntimeError, match="kaboom"):
+            f1.result(timeout=60)
+        # the queue survives a failing batch: the next request still flushes
+        f2 = mb.submit(np.zeros((2, 4), np.int32), np.zeros((2, 4)))
+        with pytest.raises(RuntimeError, match="kaboom"):
+            f2.result(timeout=60)
+    assert calls == [1, 2]
+
+
+def test_request_validation(engine):
+    srv = DPMRServeEngine(engine, hot_cache=None)
+    src = _source(seed=9)
+    ids, vals = _req(src, 0)
+    # 1-D single-sample requests are promoted to (1, K)
+    one = np.asarray(srv.submit(ids[0], vals[0]).result(timeout=120))
+    assert one.shape == (1,)
+    # short rows pad to the engine's K
+    short = np.asarray(
+        srv.submit(ids[:1, :3], vals[:1, :3]).result(timeout=120))
+    wide_ids = np.concatenate([ids[:1, :3],
+                               np.full((1, K - 3), -1, np.int32)], axis=1)
+    wide_vals = np.concatenate([vals[:1, :3], np.zeros((1, K - 3))], axis=1)
+    np.testing.assert_array_equal(
+        short, engine.predict({"ids": wide_ids, "vals": wide_vals}))
+    with pytest.raises(ValueError, match="max_features_per_sample"):
+        srv.submit(np.zeros((1, K + 1), np.int32), np.zeros((1, K + 1)))
+    with pytest.raises(ValueError, match="one shape"):
+        srv.submit(ids[:2], vals[:1])
+    srv.stop()
+
+
+# ---------------------------------------------------------------------------
+# restore-into-serving
+# ---------------------------------------------------------------------------
+
+
+def test_restore_into_serving_roundtrip(tmp_path):
+    mesh = make_host_mesh(1, 1)
+    cfg = DPMRConfig(num_features=F, max_features_per_sample=K, max_hot=16)
+    live = DPMREngine(cfg, mesh)
+    live.fit_sgd(_source(seed=10).iter_batches(), steps=6)
+    live.save(str(tmp_path))
+
+    srv = DPMRServeEngine.from_checkpoint(
+        cfg, mesh, str(tmp_path),
+        batching=BatchingConfig(max_batch=8, max_wait_ms=1.0))
+    assert int(srv.engine.state.step) == 6
+    src = _source(seed=11)
+    for i in range(3):
+        ids, vals = _req(src, i)
+        np.testing.assert_array_equal(
+            np.asarray(srv.submit(ids, vals).result(timeout=120)),
+            live.predict({"ids": ids, "vals": vals}))
+    srv.stop()
+
+
+def test_from_checkpoint_rejects_dense(tmp_path):
+    mesh = make_host_mesh(1, 1)
+    cfg = DPMRConfig(num_features=F, max_features_per_sample=K)
+    Checkpointer(str(tmp_path)).save(
+        0, {"params": np.zeros(3, np.float32)}, extra={"kind": "lm_dense"})
+    with pytest.raises(ValueError, match="not a sparse DPMR checkpoint"):
+        DPMRServeEngine.from_checkpoint(cfg, mesh, str(tmp_path))
+
+
+def test_from_checkpoint_empty_dir_raises(tmp_path):
+    mesh = make_host_mesh(1, 1)
+    cfg = DPMRConfig(num_features=F, max_features_per_sample=K)
+    with pytest.raises(FileNotFoundError):
+        DPMRServeEngine.from_checkpoint(cfg, mesh, str(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# 8 emulated devices (nightly)
+# ---------------------------------------------------------------------------
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+def test_serving_8dev_parity():
+    """Full serve stack on an 8-device pod mesh: coalesced, bucket-padded
+    micro-batches answer bit-identically to predict_padded per request."""
+    body = """
+import json
+import numpy as np
+from repro.api import DPMREngine
+from repro.configs.base import DPMRConfig
+from repro.data import get_source
+from repro.launch.mesh import make_host_mesh
+from repro.serve import BatchingConfig, DPMRServeEngine, HotCacheConfig
+
+mesh = make_host_mesh(4, 2)
+cfg = DPMRConfig(num_features=1 << 12, max_features_per_sample=8,
+                 max_hot=16)
+src = get_source("zipf_sparse", batch_size=16, num_batches=8,
+                 num_features=1 << 12, features_per_sample=8, seed=0)
+eng = DPMREngine(cfg, mesh)
+eng.fit_sgd(src.iter_batches(), steps=8)
+srv = DPMRServeEngine(
+    eng, batching=BatchingConfig(max_batch=32, max_wait_ms=5.0),
+    hot_cache=HotCacheConfig(max_hot=64, threshold=0.0, window=64,
+                             refresh_every=1000))
+reqs = [(src.batch(i)["ids"][:n], src.batch(i)["vals"][:n])
+        for i, n in enumerate([16, 3, 8, 11, 1, 16])]
+futs = [srv.submit(ids, vals) for ids, vals in reqs]
+got = [np.asarray(f.result(timeout=300)) for f in futs]
+srv.stop()
+ok = all(
+    np.array_equal(g, eng.predict_padded({"ids": ids, "vals": vals}))
+    for g, (ids, vals) in zip(got, reqs))
+m = srv.metrics_snapshot()
+print(json.dumps({"ok": bool(ok), "flushes": m["flushes"],
+                  "requests": m["requests"],
+                  "compiled": m["compiled_step_fns"]}))
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run([sys.executable, "-c", body], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert out["ok"], out
+    assert out["requests"] == 6
