@@ -1,0 +1,154 @@
+"""Analytic geometry-autotuner benchmark (the `distribution="auto"` story).
+
+Prices every registered strategy and composition on the paper's production
+geometries with `repro.api.autotune` — each tier's audited `WireBytes`
+charged at that tier's bandwidth (ICI ~10x DCN) — and pins what the tuner
+buys:
+
+  rankings     the full ranked table per mesh (single-pod 256, 2-pod 512):
+               bytes per tier, wire-cost seconds, rank, the winner.
+  headline     on the 512-shard production geometry the tuned choice must
+               be STRICTLY cheaper than the paper-faithful flat `a2a`. The
+               reduction is the primary metric. Note it is a wire-COST
+               (seconds) ratio, not a byte ratio: the hierarchical family
+               deliberately spends MORE ICI bytes to dodge DCN, so only
+               bandwidth-weighted cost makes the comparison meaningful.
+  bw sweep     chosen strategy as the ICI:DCN bandwidth ratio sweeps from
+               1x to 100x — shows the choice flipping from the flat
+               exchange (uniform fabric) to the composed hierarchical
+               family as DCN gets relatively slower, and documents the
+               monotonicity the hypothesis suite proves in general.
+
+Everything here is analytic (wire models + arithmetic, no compilation),
+so the output is DETERMINISTIC — `scripts/check_bench.py --compare` gates
+the primary metric against the committed baseline in nightly CI at the
+20% threshold, meaning a flagged change is a real wire-model or tuner
+change, never runner noise.
+
+Emits `BENCH_strategy_autotune.json` (shared envelope: `name` / `config` /
+`results`, validated by `scripts/check_bench.py`).
+
+Run: PYTHONPATH=src python benchmarks/strategy_autotune.py
+"""
+from __future__ import annotations
+
+import json
+
+from repro.api import autotune
+from repro.api.strategies import StrategyContext
+from repro.configs.base import DPMRConfig
+from repro.core import dpmr
+
+# paper-regime headline geometries (make_production_mesh shapes)
+P_SINGLE, P_MULTI, PODS = 256, 512, 2
+GLOBAL_BATCH = 1 << 24
+K = 64
+FEATURES = 1 << 30
+
+BW_RATIOS = (1, 2, 5, 10, 20, 50, 100)   # ICI:DCN speed ratio sweep
+
+
+def _ctx(p: int, po: int) -> StrategyContext:
+    cfg = DPMRConfig(num_features=FEATURES, max_features_per_sample=K)
+    cap = dpmr.capacity_for_shards(cfg, GLOBAL_BATCH // p, p)
+    return StrategyContext(axes=(), num_shards=p,
+                           block_size=-(-FEATURES // p), capacity=cap,
+                           outer_shards=po, topk_frac=cfg.topk_frac)
+
+
+def ranking_rows(ctx: StrategyContext, mesh_kind: str) -> list:
+    rows = []
+    for rank, s in enumerate(autotune.score_strategies(ctx), start=1):
+        rows.append({"mesh": mesh_kind, "strategy": s.name, "rank": rank,
+                     "inner_bytes": int(s.wire.inner),
+                     "outer_bytes": int(s.wire.outer),
+                     "total_bytes": int(s.wire.total),
+                     "cost_us": s.cost_s * 1e6, "lossy": s.lossy})
+    return rows
+
+
+def bandwidth_sweep(ctx: StrategyContext) -> list:
+    """Chosen strategy per ICI:DCN ratio (inner speed fixed)."""
+    rows = []
+    for ratio in BW_RATIOS:
+        bw = autotune.WireBandwidth(inner_gbps=900.0,
+                                    outer_gbps=900.0 / ratio)
+        ranked = autotune.score_strategies(ctx, bw)
+        rows.append({"ici_dcn_ratio": ratio, "chosen": ranked[0].name,
+                     "chosen_cost_us": ranked[0].cost_s * 1e6,
+                     "a2a_cost_us": next(s for s in ranked
+                                         if s.name == "a2a").cost_s * 1e6})
+    return rows
+
+
+def run(write_json: bool = True) -> dict:
+    ctx_multi = _ctx(P_MULTI, PODS)
+    multi = ranking_rows(ctx_multi, "multi")
+    single = ranking_rows(_ctx(P_SINGLE, 1), "single")
+
+    tuned = multi[0]
+    a2a = next(r for r in multi if r["strategy"] == "a2a")
+    reduction_x = a2a["cost_us"] / tuned["cost_us"]
+    assert reduction_x > 1.0, (
+        "the tuned choice must be strictly cheaper than flat a2a on the "
+        "production geometry", tuned, a2a)
+    assert tuned["strategy"] == autotune.choose_strategy(ctx_multi), multi
+
+    sweep = bandwidth_sweep(ctx_multi)
+    # the sweep must actually flip: a uniform fabric has no reason to pay
+    # the hierarchical family's extra ICI volume, a 10x-skewed one does
+    assert sweep[0]["chosen"] != sweep[-1]["chosen"], sweep
+
+    out = {
+        "name": "strategy_autotune",
+        "config": {"shards_single": P_SINGLE, "shards_multi": P_MULTI,
+                   "pods": PODS, "global_batch": GLOBAL_BATCH,
+                   "features": FEATURES, "features_per_sample": K,
+                   "inner_gbps": autotune.WireBandwidth().inner_gbps,
+                   "outer_gbps": autotune.WireBandwidth().outer_gbps,
+                   "bw_ratios": list(BW_RATIOS)},
+        # consumed by scripts/check_bench.py --compare (nightly CI gate):
+        # the analytic wire-cost reduction of the tuned choice vs flat a2a
+        # on the 512-shard production geometry — deterministic
+        "primary_metric": {"path": "results.autotune_cost_reduction_x",
+                           "higher_is_better": True},
+        "results": {
+            "tuned_choice": tuned["strategy"],
+            "autotune_cost_reduction_x": reduction_x,
+            "tuned_cost_us": tuned["cost_us"],
+            "a2a_cost_us": a2a["cost_us"],
+            "ranking_multi": multi,
+            "ranking_single": single,
+            "bandwidth_sweep": sweep,
+        },
+    }
+    if write_json:
+        with open("BENCH_strategy_autotune.json", "w") as fh:
+            json.dump(out, fh, indent=2)
+    return out
+
+
+def main():
+    out = run()
+    res = out["results"]
+    for rows in (res["ranking_single"], res["ranking_multi"]):
+        print(f"{'mesh':>7s} {'strategy':>18s} {'ICI B/dev':>12s} "
+              f"{'DCN B/dev':>12s} {'cost us':>9s} {'rank':>4s}")
+        for r in rows:
+            mark = " *" if r["rank"] == 1 else ""
+            print(f"{r['mesh']:>7s} {r['strategy']:>18s} "
+                  f"{r['inner_bytes']:>12.3e} {r['outer_bytes']:>12.3e} "
+                  f"{r['cost_us']:>9.1f} {r['rank']:>4d}{mark}")
+        print()
+    print("ICI:DCN bandwidth-ratio sweep (production geometry):")
+    for r in res["bandwidth_sweep"]:
+        print(f"  {r['ici_dcn_ratio']:>4d}x -> {r['chosen']:<18s} "
+              f"{r['chosen_cost_us']:>8.1f} us (a2a {r['a2a_cost_us']:.1f})")
+    print(f"\ntuned choice on 512 shards: {res['tuned_choice']} — "
+          f"x{res['autotune_cost_reduction_x']:.2f} cheaper wire than a2a")
+    print("wrote BENCH_strategy_autotune.json")
+    return out
+
+
+if __name__ == "__main__":
+    main()

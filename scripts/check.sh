@@ -49,7 +49,8 @@ t 300 python -c "
 from repro.api import DPMREngine, list_strategies, get_strategy
 names = list_strategies()
 assert {'a2a', 'allgather', 'psum_scatter', 'hier_a2a',
-        'compressed_reduce', 'topk_reduce', 'overlap_a2a'} <= set(names), \
+        'compressed_reduce', 'topk_reduce', 'overlap_a2a',
+        'hier_a2a+topk', 'hier_a2a+int8'} <= set(names), \
     names
 for n in names:
     get_strategy(n)
@@ -146,6 +147,34 @@ print('negative control OK: miswired strategy rejected '
       f'({report[\"num_findings\"]} findings)')
 "
 
+# composition smoke: the registered per-tier composition must trace, price
+# BOTH wire tiers, pass a positive audit on the analytic geometries, and
+# the autotuner must rank it below flat a2a on the multi-pod geometry
+t 300 python -c "
+from repro.analysis import audit_registry, build_contexts
+from repro.api import autotune, get_strategy
+from repro.api.strategies import StrategyContext, WireBytes
+
+pod = StrategyContext(axes=(), num_shards=8, block_size=1 << 9,
+                      capacity=64, outer_shards=2)
+for name in ('hier_a2a+topk', 'hier_a2a+int8'):
+    wb = get_strategy(name).bytes_per_device(pod)
+    assert isinstance(wb, WireBytes) and wb.inner > 0 and wb.outer > 0, \
+        (name, wb)
+report = audit_registry(strategies=['hier_a2a+topk', 'hier_a2a+int8'],
+                        contexts=build_contexts(production=False),
+                        engine_checks=False)
+assert report['ok'], report['findings']
+# paper regime (request volume >> table block): the tuner must rank the
+# composed DCN-sparsified exchange below flat a2a
+regime = pod._replace(capacity=4096)
+costs = {s.name: s.cost_s for s in autotune.score_strategies(regime)}
+assert costs['hier_a2a+topk'] < costs['a2a'], costs
+winner = autotune.choose_strategy(regime)
+print('composition smoke OK: compositions priced on both tiers, audited, '
+      f'tuner winner at the paper regime = {winner}')
+"
+
 echo "== docs link-check (every docs/*.md code path exists) =="
 t 120 python scripts/check_docs.py
 
@@ -209,7 +238,40 @@ print(f'serving OK: 8 requests, {m[\"flushes\"]} flushes, '
 
 echo "== tier-1 tests (fast; -m 'not slow') =="
 # must stay under CI's 15-minute job cap so a hang fails HERE with a
-# section-level diagnostic, not as a generic job timeout (~7 min healthy)
-t 660 python -m pytest -x -q -m "not slow"
+# section-level diagnostic, not as a generic job timeout (~7 min healthy).
+# When pytest-cov is installed (the `dev` extra; CI always has it) the same
+# run also collects line coverage for the api/analysis packages — folded
+# into this one invocation so the suite never runs twice
+if python -c "import pytest_cov" >/dev/null 2>&1; then
+    t 720 python -m pytest -x -q -m "not slow" \
+        --cov=repro.api --cov=repro.analysis \
+        --cov-report=json:COVERAGE_report.json
+else
+    t 660 python -m pytest -x -q -m "not slow"
+fi
+
+echo "== line coverage: src/repro/api + src/repro/analysis (informational) =="
+# REPORTING ONLY — never gates. CI uploads COVERAGE_report.json as an
+# artifact on failure so a red run documents what the suite exercised.
+if [ -f COVERAGE_report.json ]; then
+    t 60 python -c "
+import json
+rep = json.load(open('COVERAGE_report.json'))
+def pct(fragment):
+    cov = tot = 0
+    for path, entry in rep['files'].items():
+        if fragment in path.replace('\\\\', '/'):
+            s = entry['summary']
+            cov += s['covered_lines']; tot += s['num_statements']
+    return cov, tot, 100.0 * cov / max(tot, 1)
+for frag, label in (('repro/api/', 'src/repro/api'),
+                    ('repro/analysis/', 'src/repro/analysis')):
+    cov, tot, p = pct(frag)
+    print(f'{label:<22s} {p:5.1f}% lines ({cov}/{tot})')
+"
+else
+    echo "pytest-cov not installed; coverage reporting skipped" \
+         "(pip install -e '.[test,dev]' to enable)"
+fi
 
 echo "ALL CHECKS PASSED"

@@ -4,12 +4,22 @@
 
 `DPMREngine` is the façade (state + compiled StepFns + batch placement +
 checkpointing); the strategy registry makes the parameter-distribution
-shuffle a pluggable component, and the data plane (`repro.data`, re-exported
-here) does the same for the input face: `fit`/`fit_sgd`/`evaluate` accept a
-`ShardedLoader` or a registered source name + spec. The legacy fn-dict
-surfaces (`core.sparse_lr`, `fns["..."]` access) were removed after their
-one-release deprecation — migration table in CHANGES.md.
+shuffle a pluggable component — including per-tier compositions
+(`ComposedStrategy` / `register_composition`, e.g. `"hier_a2a+topk"`) and
+the analytic geometry autotuner (`repro.api.autotune`, reached via
+`DPMRConfig.distribution = "auto"`) — and the data plane (`repro.data`,
+re-exported here) does the same for the input face:
+`fit`/`fit_sgd`/`evaluate` accept a `ShardedLoader` or a registered source
+name + spec. The legacy fn-dict surfaces (`core.sparse_lr`, `fns["..."]`
+access) were removed after their one-release deprecation — migration table
+in CHANGES.md.
 """
+from repro.api.autotune import (
+    ScoredStrategy,
+    WireBandwidth,
+    choose_strategy,
+    score_strategies,
+)
 from repro.api.engine import (
     DPMREngine,
     hot_ids_from_corpus,
@@ -18,16 +28,21 @@ from repro.api.engine import (
 from repro.api.strategies import (
     AllGatherStrategy,
     AllToAllStrategy,
+    ComposedStrategy,
     CompressedReduceStrategy,
     DistributionStrategy,
     HierarchicalA2AStrategy,
+    Int8OuterLeg,
+    OuterLeg,
     OverlapA2AStrategy,
     PsumScatterStrategy,
     StrategyContext,
+    TopKOuterLeg,
     TopKReduceStrategy,
     WireBytes,
     get_strategy,
     list_strategies,
+    register_composition,
     register_strategy,
 )
 from repro.core.dpmr import DPMRState, StepFns, init_state, make_step_fns
@@ -42,12 +57,14 @@ from repro.data import (
 )
 
 __all__ = [
-    "AllGatherStrategy", "AllToAllStrategy", "CompressedReduceStrategy",
-    "Cursor", "DPMREngine", "DPMRState", "DataSource",
-    "DistributionStrategy", "HierarchicalA2AStrategy", "OverlapA2AStrategy",
-    "PsumScatterStrategy", "ShardedLoader", "StepFns", "StrategyContext",
-    "TopKReduceStrategy", "WireBytes", "get_source", "get_strategy",
-    "hot_ids_from_corpus", "init_state", "list_sources", "list_strategies",
-    "make_step_fns", "put_batch", "register_source", "register_strategy",
-    "write_file_corpus",
+    "AllGatherStrategy", "AllToAllStrategy", "ComposedStrategy",
+    "CompressedReduceStrategy", "Cursor", "DPMREngine", "DPMRState",
+    "DataSource", "DistributionStrategy", "HierarchicalA2AStrategy",
+    "Int8OuterLeg", "OuterLeg", "OverlapA2AStrategy", "PsumScatterStrategy",
+    "ScoredStrategy", "ShardedLoader", "StepFns", "StrategyContext",
+    "TopKOuterLeg", "TopKReduceStrategy", "WireBandwidth", "WireBytes",
+    "choose_strategy", "get_source", "get_strategy", "hot_ids_from_corpus",
+    "init_state", "list_sources", "list_strategies", "make_step_fns",
+    "put_batch", "register_composition", "register_source",
+    "register_strategy", "score_strategies", "write_file_corpus",
 ]

@@ -1,0 +1,100 @@
+"""Analytic geometry autotuner over the distribution-strategy registry.
+
+Every registered strategy (compositions included) prices itself with a
+two-tier `WireBytes(inner, outer)` model that `repro.analysis.audit`
+proves against the collectives in its own jaxpr. This module turns those
+audited models into a planner: given a `StrategyContext` plus declared
+(or measured) per-tier bandwidths, `score_strategies` charges each tier's
+bytes at that tier's speed and ranks every candidate by the seconds its
+exchange would occupy the wire; `choose_strategy` picks the cheapest
+admissible one. `DPMRConfig.distribution = "auto"` routes through it
+(`core.dpmr.resolve_distribution`), `launch/dryrun.py --strategies`
+prints the ranked table with the winner marked, and
+`benchmarks/strategy_autotune.py` pins the production-geometry win as a
+regression-gated artifact.
+
+The objective is wire-cost seconds, NOT total bytes: a hierarchical
+strategy deliberately spends MORE ICI bytes to spend fewer DCN bytes,
+which only reads as a win once each tier is charged at its own speed.
+
+Tie-breaking is deterministic (equal cost falls back to name order), so
+the tuned choice is stable across runs — checkpoints record the resolved
+name, and the hypothesis suite in tests/test_properties.py holds the
+optimality/monotonicity/determinism contract.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+from repro.api.strategies import (StrategyContext, WireBytes, get_strategy,
+                                  list_strategies)
+
+
+class WireBandwidth(NamedTuple):
+    """Per-tier wire speeds in GB/s.
+
+    Defaults are the repo's planning numbers (ICI ~10x DCN, the ratio the
+    mesh-tier split is built around); pass measured values to tune for a
+    real fabric.
+    """
+
+    inner_gbps: float = 900.0   # ICI, intra-pod
+    outer_gbps: float = 90.0    # DCN, cross-pod
+
+
+class ScoredStrategy(NamedTuple):
+    """One ranked candidate: its audited wire model priced on a fabric."""
+
+    name: str
+    wire: WireBytes
+    cost_s: float     # seconds the exchange occupies the wire
+    lossy: bool       # carries error-feedback state on this geometry
+
+
+def wire_cost(wire: WireBytes, bandwidth: WireBandwidth) -> float:
+    """Seconds of wire occupancy: each tier's bytes at that tier's speed."""
+    return (wire.inner / (bandwidth.inner_gbps * 1e9)
+            + wire.outer / (bandwidth.outer_gbps * 1e9))
+
+
+def score_strategies(ctx: StrategyContext,
+                     bandwidth: WireBandwidth | None = None, *,
+                     require_exact: bool = False,
+                     strategies: list[str] | None = None
+                     ) -> list[ScoredStrategy]:
+    """Rank candidates by analytic wire cost on `ctx`, cheapest first.
+
+    `strategies` defaults to the whole registry. `require_exact` drops
+    candidates that are lossy ON THIS GEOMETRY (i.e. `init_carry(ctx)` is
+    not None — a composition is exact on a single-pod mesh where it
+    degenerates to its member). Equal costs break deterministically by
+    name.
+    """
+    bw = bandwidth or WireBandwidth()
+    scored = []
+    for name in (strategies if strategies is not None else list_strategies()):
+        s = get_strategy(name)
+        lossy = s.init_carry(ctx) is not None
+        if require_exact and lossy:
+            continue
+        wire = s.bytes_per_device(ctx)
+        scored.append(ScoredStrategy(name=name, wire=wire,
+                                     cost_s=wire_cost(wire, bw),
+                                     lossy=lossy))
+    return sorted(scored, key=lambda s: (s.cost_s, s.name))
+
+
+def choose_strategy(ctx: StrategyContext,
+                    bandwidth: WireBandwidth | None = None, *,
+                    require_exact: bool = False,
+                    strategies: list[str] | None = None) -> str:
+    """The cheapest admissible strategy name for `ctx` (see
+    `score_strategies` for the ranking contract)."""
+    ranked = score_strategies(ctx, bandwidth, require_exact=require_exact,
+                              strategies=strategies)
+    if not ranked:
+        raise ValueError(
+            "no admissible strategy to choose from "
+            f"(require_exact={require_exact}, candidates="
+            f"{strategies if strategies is not None else list_strategies()})")
+    return ranked[0].name

@@ -46,6 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import compat
+from repro.api.strategies import list_strategies
 from repro.ckpt.checkpointer import Checkpointer
 from repro.configs.base import DPMRConfig
 from repro.core import dpmr, hot_sharding
@@ -390,8 +391,12 @@ class DPMREngine:
         the exact batch stream."""
         loader = loader if loader is not None else self._loader
         step = int(self.state.step)
+        # record the RESOLVED strategy name: under cfg.distribution="auto"
+        # the carry in DPMRState.strat belongs to whatever the autotuner
+        # picked, and a restore must be able to name (and check) it
         extra = {"kind": "dpmr_sparse",
-                 "distribution": self.cfg.distribution,
+                 "distribution": dpmr.resolve_distribution(self.cfg,
+                                                           self.mesh),
                  "topk_frac": self.cfg.topk_frac,
                  "optimizer": self.cfg.optimizer,
                  "num_features": self.cfg.num_features}
@@ -420,15 +425,28 @@ class DPMREngine:
             self.state, manifest = Checkpointer(directory).restore(
                 self.state, step=step)
         saved_dist = manifest.get("extra", {}).get("distribution")
-        if saved_dist is not None and saved_dist != self.cfg.distribution:
+        if saved_dist is not None and saved_dist not in list_strategies():
+            # a registry KeyError here would name nothing useful; the
+            # common culprit is a composition (or other user-registered
+            # strategy) from the saving session that this process never
+            # re-registered
+            raise ValueError(
+                f"checkpoint was trained with distribution strategy "
+                f"{saved_dist!r}, which is not registered in this "
+                "process — register it first (register_strategy / "
+                "register_composition, e.g. a session-local composition "
+                "does not auto-register on import). Registered: "
+                f"{list_strategies()}")
+        mine = dpmr.resolve_distribution(self.cfg, self.mesh)
+        if saved_dist is not None and saved_dist != mine:
             warnings.warn(
                 f"checkpoint was trained with distribution={saved_dist!r} "
-                f"but this engine uses {self.cfg.distribution!r}; the "
+                f"but this engine uses {mine!r}; the "
                 "persistent strategy carry (DPMRState.strat) may be "
                 "meaningless or mis-shaped for the new strategy",
                 RuntimeWarning, stacklevel=2)
         saved_frac = manifest.get("extra", {}).get("topk_frac")
-        if (self.cfg.distribution == "topk_reduce"
+        if (mine == "topk_reduce"
                 and saved_dist == "topk_reduce"
                 and saved_frac is not None
                 and saved_frac != self.cfg.topk_frac):

@@ -52,6 +52,13 @@ block rows per device):
                    collectives XLA can dispatch asynchronously and overlap
                    with the step's compute. Bit-identical to a2a; same
                    wire bytes.
+  hier_a2a+topk    per-tier composition (`ComposedStrategy`): hier_a2a's
+                   exact exchange on ICI, a top-k sparsified reduce on the
+                   DCN leg only — k = ceil(topk_frac*(|F|/P)) (value, row)
+                   pairs per pod pair, error feedback in `DPMRState.strat`.
+  hier_a2a+int8    same composition with the DCN partials crossing as int8
+                   + per-block f32 scales (compressed_reduce's scheme on
+                   the outer tier only).
 
 All exact strategies produce identical parameters when capacity does not
 overflow (tested in tests/test_dpmr.py) — `overlap_a2a` bit-identically so;
@@ -371,29 +378,41 @@ class HierarchicalA2AStrategy(DistributionStrategy):
                             "cold_ids": cold_ids,
                             "overflow": routing.overflow}
 
-    def reduce(self, ctx, cold_loc, grads_flat, fwd):
+    def _mirror_accumulate(self, ctx, cold_loc, grads_flat, fwd):
+        """Inner-tier gradient reduce up to (not including) the DCN leg.
+
+        Returns the (Po*block,) mirror accumulator whose segment q holds
+        this pod's partial sums for pod q's owner block — everything the
+        strategy does before the single outer-tier collective. This is the
+        composition seam: `ComposedStrategy` swaps the psum_scatter that
+        follows for a lossy outer leg while reusing this inner exchange.
+        Requires Po > 1 (with one pod there is no mirror layout).
+        """
         po, pi = ctx.outer_shards, ctx.inner_shards
+        block = ctx.block_size
+        if pi == 1:
+            rem = fwd["rem_ids"]
+            f_mirror = po * block
+            return jnp.zeros((f_mirror,), jnp.float32).at[
+                jnp.where(rem >= 0, rem, f_mirror)
+            ].add(jnp.where(rem >= 0, grads_flat, 0.0), mode="drop")
+        send = sparse.combine_grads(fwd["routing"], grads_flat)
+        recv = jax.lax.all_to_all(send, ctx.inner_axes, 0, 0,
+                                  tiled=True)
+        base = jax.lax.axis_index(ctx.inner_axes) * (po * block)
+        return sparse.owner_accumulate(
+            fwd["req_recv"], recv,
+            jnp.zeros((po * block,), grads_flat.dtype), base)
+
+    def reduce(self, ctx, cold_loc, grads_flat, fwd):
+        po = ctx.outer_shards
         if po == 1:
             send = sparse.combine_grads(fwd["routing"], grads_flat)
             recv = jax.lax.all_to_all(send, ctx.axes, 0, 0, tiled=True)
             return sparse.owner_accumulate(fwd["req_recv"], recv,
                                            jnp.zeros_like(cold_loc),
                                            _owner_base(ctx))
-        block = ctx.block_size
-        if pi == 1:
-            rem = fwd["rem_ids"]
-            f_mirror = po * block
-            mirror_acc = jnp.zeros((f_mirror,), jnp.float32).at[
-                jnp.where(rem >= 0, rem, f_mirror)
-            ].add(jnp.where(rem >= 0, grads_flat, 0.0), mode="drop")
-        else:
-            send = sparse.combine_grads(fwd["routing"], grads_flat)
-            recv = jax.lax.all_to_all(send, ctx.inner_axes, 0, 0,
-                                      tiled=True)
-            base = jax.lax.axis_index(ctx.inner_axes) * (po * block)
-            mirror_acc = sparse.owner_accumulate(
-                fwd["req_recv"], recv,
-                jnp.zeros((po * block,), grads_flat.dtype), base)
+        mirror_acc = self._mirror_accumulate(ctx, cold_loc, grads_flat, fwd)
         # per-pod partials cross DCN exactly once: segment q of the mirror
         # accumulator is pod q's owner block, summed across pods
         return jax.lax.psum_scatter(mirror_acc, ctx.outer_axes,
@@ -617,6 +636,178 @@ class OverlapA2AStrategy(AllToAllStrategy):
                                        _owner_base(ctx))
 
 
+class OuterLeg:
+    """The DCN half of a per-tier composition.
+
+    A leg replaces the single outer-tier collective of a hierarchical
+    strategy's reduce — it receives the (Po*block,) mirror accumulator
+    (segment q = this pod's partials for pod q's owner block) and must
+    deliver this device's (block,) owner gradient by exchanging ONLY over
+    `ctx.outer_axes`. Legs may keep an error-feedback residual: declare
+    its static length via `carry_len` (0 = stateless) and advance it in
+    `reduce_outer`; `ComposedStrategy` namespaces it into the composed
+    carry that the engine persists in `DPMRState.strat`.
+    """
+
+    name: str = "leg"
+
+    def carry_len(self, ctx: StrategyContext) -> int:
+        """Static residual length on this geometry (0 = no carry)."""
+        return 0
+
+    def reduce_outer(self, ctx: StrategyContext, mirror_acc: jax.Array,
+                     carry: jax.Array) -> tuple[jax.Array, jax.Array]:
+        raise NotImplementedError
+
+    def reduce_bytes(self, ctx: StrategyContext) -> int:
+        """DCN bytes a device receives on the reduce leg (Po > 1)."""
+        raise NotImplementedError
+
+
+class TopKOuterLeg(OuterLeg):
+    """Top-k sparsified DCN reduce: each pod sends, per destination pod,
+    only the k = ceil(topk_frac * block) largest-|g| rows of its partial
+    block as (value f32, row int32) pairs; losers bank an error-feedback
+    residual over the (Po*block,) mirror layout, re-injected when the row
+    next carries gradient mass (same EF-SGD lineage as `topk_reduce`, but
+    applied AFTER the exact inner exchange, so only the cheap-to-compress
+    cross-pod partials are sparsified).
+    """
+
+    name = "topk"
+
+    def _k(self, ctx) -> int:
+        return compression.topk_count(ctx.block_size, ctx.topk_frac)
+
+    def carry_len(self, ctx):
+        return ctx.outer_shards * ctx.block_size
+
+    def reduce_outer(self, ctx, mirror_acc, carry):
+        po, block = ctx.outer_shards, ctx.block_size
+        k = self._k(ctx)
+        comp = (mirror_acc + carry).reshape(po, block)   # error feedback
+        top_idx, top_mask = compression.topk_select(jnp.abs(comp), k)
+        vals_k = jnp.take_along_axis(comp, top_idx, axis=1)   # (Po, k)
+        ids_k = top_idx.astype(jnp.int32)                # within-block rows
+        new_carry = jnp.where(top_mask, 0.0, comp).reshape(-1)
+        v_recv = jax.lax.all_to_all(vals_k, ctx.outer_axes, 0, 0,
+                                    tiled=True)
+        i_recv = jax.lax.all_to_all(ids_k, ctx.outer_axes, 0, 0,
+                                    tiled=True)
+        grad = jnp.zeros((block,), jnp.float32).at[
+            i_recv.reshape(-1)
+        ].add(v_recv.reshape(-1))
+        return grad, new_carry
+
+    def reduce_bytes(self, ctx):
+        # k (f32 value, int32 row) pairs from each of the (Po-1) other pods
+        return (ctx.outer_shards - 1) * self._k(ctx) * 8
+
+
+class Int8OuterLeg(OuterLeg):
+    """Int8 block-quantized DCN reduce: the per-pod partial blocks cross
+    the slow tier as int8 + per-`compression.BLOCK` f32 scales (the
+    `compressed_reduce` scheme, applied to the outer tier only), with the
+    quantization residual banked as an error-feedback carry over the
+    (Po*block,) mirror layout.
+    """
+
+    name = "int8"
+
+    def _padded_block(self, ctx) -> int:
+        qb = compression.BLOCK
+        return -(-ctx.block_size // qb) * qb
+
+    def carry_len(self, ctx):
+        return ctx.outer_shards * ctx.block_size
+
+    def reduce_outer(self, ctx, mirror_acc, carry):
+        po, block = ctx.outer_shards, ctx.block_size
+        qb = compression.BLOCK
+        bp = self._padded_block(ctx)
+        comp = mirror_acc + carry                        # error feedback
+        seg = jnp.pad(comp.reshape(po, block), ((0, 0), (0, bp - block)))
+        q, scale = compression.quantize(seg.reshape(-1))
+        new_carry = comp - compression.dequantize(
+            q, scale, po * bp).reshape(po, bp)[:, :block].reshape(-1)
+        q_recv = jax.lax.all_to_all(q.reshape(po, bp), ctx.outer_axes,
+                                    0, 0, tiled=True)    # (Po, bp) int8
+        s_recv = jax.lax.all_to_all(scale.reshape(po, bp // qb),
+                                    ctx.outer_axes, 0, 0, tiled=True)
+        deq = (q_recv.astype(jnp.float32).reshape(po, bp // qb, qb)
+               * s_recv[..., None])
+        grad = deq.reshape(po, bp)[:, :block].sum(axis=0)
+        return grad, new_carry
+
+    def reduce_bytes(self, ctx):
+        bp = self._padded_block(ctx)
+        per_peer = bp + (bp // compression.BLOCK) * 4    # int8 + scales
+        return (ctx.outer_shards - 1) * per_peer
+
+
+class ComposedStrategy(DistributionStrategy):
+    """Per-tier composition: a hierarchical member's exact exchange on the
+    fast inner tier (ICI), an `OuterLeg`'s lossy reduce on the slow outer
+    tier (DCN).
+
+    The cut point is the member's `_mirror_accumulate` seam: forward and
+    the inner gradient shuffle are the member's own (exact), and only the
+    single DCN crossing of the reduce is replaced by the leg. With one pod
+    (Po == 1) the composition degenerates to the member exactly — it is
+    then stateless and bit-identical. Carries are namespaced per member by
+    `carry_layout`; on the full-batch accumulation path the composition
+    falls back to the member's exact reduce with the carry frozen (the
+    same discipline every lossy built-in follows).
+    """
+
+    def __init__(self, inner: DistributionStrategy, leg: OuterLeg):
+        self.inner = inner
+        self.leg = leg
+        self.name = f"{inner.name}+{leg.name}"
+
+    def carry_layout(self, ctx) -> list[tuple[str, int]]:
+        """Namespaced `(member_name, length)` segments of the composed
+        carry, in `DPMRState.strat` order. Only stateful members appear;
+        today that is at most the outer leg (`register_composition`
+        requires a stateless inner member)."""
+        n = self.leg.carry_len(ctx) if ctx.outer_shards > 1 else 0
+        return [(self.leg.name, n)] if n else []
+
+    def distribute(self, ctx, cold_loc, cold_ids):
+        return self.inner.distribute(ctx, cold_loc, cold_ids)
+
+    def init_carry(self, ctx):
+        total = sum(n for _, n in self.carry_layout(ctx))
+        if total == 0:
+            return None
+        return jnp.zeros((total,), jnp.float32)
+
+    def reduce(self, ctx, cold_loc, grads_flat, fwd):
+        if ctx.outer_shards == 1:
+            # single tier: the member IS the composition (stateless here)
+            return self.inner.reduce(ctx, cold_loc, grads_flat, fwd)
+        if fwd.get("accumulate", False):
+            # full-batch accumulation: the carry is frozen, so sparsifying
+            # or quantizing the DCN leg would drop epoch-gradient mass /
+            # re-inject a restored residual once per accumulated batch.
+            # Run the member's exact reduce and pass the carry through.
+            return (self.inner.reduce(ctx, cold_loc, grads_flat, fwd),
+                    fwd["carry"])
+        mirror_acc = self.inner._mirror_accumulate(ctx, cold_loc,
+                                                   grads_flat, fwd)
+        return self.leg.reduce_outer(ctx, mirror_acc, fwd["carry"])
+
+    def bytes_per_device(self, ctx):
+        member = self.inner.bytes_per_device(ctx)
+        po = ctx.outer_shards
+        if po == 1:
+            return member
+        # inner tier is the member's own (exact) exchange; outer = the
+        # forward pod all_gather of the local block + the leg's reduce
+        outer = ctx.block_size * (po - 1) * 4 + self.leg.reduce_bytes(ctx)
+        return WireBytes(inner=member.inner, outer=outer)
+
+
 _REGISTRY: dict[str, DistributionStrategy] = {}
 
 
@@ -655,6 +846,25 @@ def list_strategies() -> list[str]:
     return sorted(_REGISTRY)
 
 
+def register_composition(inner_name: str, leg: OuterLeg,
+                         name: str | None = None) -> ComposedStrategy:
+    """Register `ComposedStrategy(get_strategy(inner_name), leg)` under
+    `"<inner>+<leg>"` (or `name`). The inner member must expose the
+    `_mirror_accumulate` seam (hierarchical reduce split at the DCN
+    crossing) and must be stateless — its own carry would have to be
+    namespaced alongside the leg's, which no member needs today.
+    """
+    inner = get_strategy(inner_name)
+    if not hasattr(inner, "_mirror_accumulate"):
+        raise TypeError(
+            f"strategy {inner_name!r} has no _mirror_accumulate seam; "
+            "only hierarchical strategies whose reduce isolates the DCN "
+            "crossing can take a composed outer leg")
+    composed = ComposedStrategy(inner, leg)
+    register_strategy(name or composed.name, composed)
+    return composed
+
+
 register_strategy("a2a", AllToAllStrategy())
 register_strategy("allgather", AllGatherStrategy())
 register_strategy("psum_scatter", PsumScatterStrategy())
@@ -662,3 +872,5 @@ register_strategy("hier_a2a", HierarchicalA2AStrategy())
 register_strategy("compressed_reduce", CompressedReduceStrategy())
 register_strategy("topk_reduce", TopKReduceStrategy())
 register_strategy("overlap_a2a", OverlapA2AStrategy())
+register_composition("hier_a2a", TopKOuterLeg())
+register_composition("hier_a2a", Int8OuterLeg())

@@ -192,7 +192,13 @@ class DPMRConfig:
     #                                  registry (a2a | allgather |
     #                                  psum_scatter | hier_a2a |
     #                                  compressed_reduce | topk_reduce |
-    #                                  overlap_a2a | user-registered)
+    #                                  overlap_a2a | compositions like
+    #                                  hier_a2a+topk / hier_a2a+int8 |
+    #                                  user-registered), or the sentinel
+    #                                  "auto": repro.api.autotune picks the
+    #                                  cheapest strategy for the mesh from
+    #                                  the analytic per-tier wire models
+    #                                  (core.dpmr.resolve_distribution)
     topk_frac: float = 0.25          # topk_reduce: fraction of the per-
     #                                  destination capacity slots whose
     #                                  largest-|g| gradients go on the wire

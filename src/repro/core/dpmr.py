@@ -22,8 +22,11 @@ exactly the paper's HDFS co-location):
 The distributeParameters / gradient-reduce collectives are pluggable
 `DistributionStrategy` objects looked up by name from `repro.api.strategies`
 (cfg.distribution: "a2a" | "allgather" | "psum_scatter" | "hier_a2a" |
-"compressed_reduce" | "topk_reduce" | "overlap_a2a" | anything third
-parties register). Strategies see the
+"compressed_reduce" | "topk_reduce" | "overlap_a2a" | registered
+compositions like "hier_a2a+topk" | anything third parties register |
+"auto", which asks `repro.api.autotune` for the cheapest strategy under
+the analytic per-tier wire-cost model — see `resolve_distribution`).
+Strategies see the
 mesh's wire tiers — `launch.mesh.tier_axes` factors the axes into the
 DCN-crossing outer tier (`pod`) and the ICI inner tier, carried on the
 `StrategyContext` — and may keep persistent per-device state (`init_carry`,
@@ -110,13 +113,35 @@ def make_strategy_context(cfg: DPMRConfig, mesh, cap: int = 0):
                            outer_shards=po, topk_frac=cfg.topk_frac)
 
 
+_AUTOTUNE_BATCH_LOCAL = 128
+#   nominal per-device batch behind cfg.distribution == "auto": the
+#   autotuner prices capacity at this fixed size so one (cfg, mesh) pair
+#   resolves to ONE strategy — a batch-size-dependent choice could flip
+#   between StepFns compilations and invalidate the persistent carry shape
+
+
+def resolve_distribution(cfg: DPMRConfig, mesh) -> str:
+    """The concrete strategy name for this (cfg, mesh): cfg.distribution
+    itself, or — when it is the sentinel `"auto"` — the cheapest
+    registered strategy under the analytic per-tier wire-cost model
+    (`repro.api.autotune.choose_strategy`) on this mesh's geometry."""
+    if cfg.distribution != "auto":
+        return cfg.distribution
+    # late import: repro.api imports this module
+    from repro.api import autotune
+
+    ctx = make_strategy_context(
+        cfg, mesh, cap=capacity(cfg, _AUTOTUNE_BATCH_LOCAL, mesh))
+    return autotune.choose_strategy(ctx)
+
+
 def strategy_carry_len(cfg: DPMRConfig, mesh) -> int:
-    """Per-device length L of cfg.distribution's persistent carry (1 when
-    the strategy is stateless; the placeholder keeps the state pytree
+    """Per-device length L of the resolved strategy's persistent carry (1
+    when the strategy is stateless; the placeholder keeps the state pytree
     shape-stable across strategies at negligible cost)."""
     from repro.api.strategies import get_strategy
 
-    carry = get_strategy(cfg.distribution).init_carry(
+    carry = get_strategy(resolve_distribution(cfg, mesh)).init_carry(
         make_strategy_context(cfg, mesh))
     return 1 if carry is None else int(carry.shape[0])
 
@@ -249,7 +274,8 @@ class StepFns(NamedTuple):
     capacity: int            # per-(src,dst) a2a slots
     block_size: int          # feature-table rows per device
     num_shards: int          # P
-    strategy: str = "a2a"    # registered distribution-strategy name
+    strategy: str = "a2a"    # RESOLVED distribution-strategy name (a
+    #                          concrete registry entry, never "auto")
     ctx: object = None       # StrategyContext of this compilation
 
 
@@ -268,7 +294,8 @@ def make_step_fns(cfg: DPMRConfig, mesh, batch_size: int,
     block = f // p
     assert batch_size % p == 0, (batch_size, p)
     cap = capacity(cfg, batch_size // p, mesh, cap_factor)
-    strategy = get_strategy(cfg.distribution)
+    dist = resolve_distribution(cfg, mesh)
+    strategy = get_strategy(dist)
     ctx = make_strategy_context(cfg, mesh, cap)
     stateful = strategy.init_carry(ctx) is not None
     sched = make_schedule(cfg)
@@ -368,4 +395,4 @@ def make_step_fns(cfg: DPMRConfig, mesh, batch_size: int,
     return StepFns(train_step=train_step, grad_step=grad_step,
                    apply_update=apply_update, predict=predict,
                    capacity=cap, block_size=block, num_shards=p,
-                   strategy=cfg.distribution, ctx=ctx)
+                   strategy=dist, ctx=ctx)

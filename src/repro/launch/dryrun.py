@@ -80,12 +80,16 @@ def run_strategy_wire(global_batch: int = 1 << 24, k: int = 64,
 
     Per (mesh, strategy): bytes/device/step on the fast tier (ICI, inner
     axes) and across DCN (the `pod` outer axis), from each strategy's own
-    `bytes_per_device` model at the paper's full-batch regime. The multi
-    rows are where `hier_a2a` earns its keep: its DCN bytes are the table
-    block, not the shuffled request volume.
+    `bytes_per_device` model at the paper's full-batch regime, plus the
+    autotuner's wire-cost ranking (each tier's bytes charged at that
+    tier's bandwidth, `repro.api.autotune`) — the per-mesh winner, i.e.
+    what `DPMRConfig.distribution="auto"` would pick, is marked `*`. The
+    multi rows are where the hierarchical family earns its keep: its DCN
+    bytes are the table block (or a sparsified fraction of it for
+    `hier_a2a+topk`), not the shuffled request volume.
     """
-    from repro.api.strategies import StrategyContext, get_strategy, \
-        list_strategies
+    from repro.api import autotune
+    from repro.api.strategies import StrategyContext
     from repro.configs.base import DPMRConfig
     from repro.core import dpmr
 
@@ -98,19 +102,27 @@ def run_strategy_wire(global_batch: int = 1 << 24, k: int = 64,
                               block_size=-(-feature_space // p),
                               capacity=cap, outer_shards=po,
                               topk_frac=cfg.topk_frac)
-        for name in list_strategies():
-            wb = get_strategy(name).bytes_per_device(ctx)
-            rows.append({"mesh": mesh_kind, "strategy": name,
+        ranked = autotune.score_strategies(ctx)
+        winner = ranked[0].name
+        for rank, s in enumerate(ranked, start=1):
+            rows.append({"mesh": mesh_kind, "strategy": s.name,
                          "shards": p, "pods": po, "capacity": cap,
-                         "inner_bytes": int(wb.inner),
-                         "outer_bytes": int(wb.outer),
-                         "total_bytes": int(wb.total)})
+                         "inner_bytes": int(s.wire.inner),
+                         "outer_bytes": int(s.wire.outer),
+                         "total_bytes": int(s.wire.total),
+                         "cost_us": s.cost_s * 1e6, "rank": rank,
+                         "lossy": s.lossy, "chosen": s.name == winner})
     print(f"{'mesh':>7s} {'strategy':>18s} {'ICI B/dev':>12s} "
-          f"{'DCN B/dev':>12s} {'total':>12s}")
+          f"{'DCN B/dev':>12s} {'total':>12s} {'cost us':>9s} "
+          f"{'rank':>4s}")
     for r in rows:
+        mark = " *" if r["chosen"] else ("  " if not r["lossy"] else " ~")
         print(f"{r['mesh']:>7s} {r['strategy']:>18s} "
               f"{r['inner_bytes']:>12.3e} {r['outer_bytes']:>12.3e} "
-              f"{r['total_bytes']:>12.3e}")
+              f"{r['total_bytes']:>12.3e} {r['cost_us']:>9.1f} "
+              f"{r['rank']:>4d}{mark}")
+    print("  * = autotuner's pick (distribution=\"auto\"); "
+          "~ = lossy (error-feedback carry)")
     return rows
 
 

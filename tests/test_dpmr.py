@@ -392,6 +392,27 @@ def test_restore_warns_on_strategy_mismatch(tmp_path):
         other.restore(str(tmp_path))
 
 
+def test_restore_unregistered_strategy_raises_value_error(tmp_path):
+    """A checkpoint whose saved strategy is NOT in this process's registry
+    (e.g. a session-local composition that was never re-registered) must
+    fail with a ValueError naming the missing strategy — not leak the
+    registry's KeyError."""
+    from repro.api.strategies import _REGISTRY
+
+    mesh = make_host_mesh(1, 1)
+    register_strategy("ephemeral_xyz", get_strategy("a2a"))
+    try:
+        eng = DPMREngine(_cfg(distribution="ephemeral_xyz"), mesh)
+        eng.fit_sgd(_batches(128, 2))
+        eng.save(str(tmp_path))
+    finally:
+        _REGISTRY.pop("ephemeral_xyz", None)
+
+    other = DPMREngine(_cfg(distribution="a2a"), mesh)
+    with pytest.raises(ValueError, match="ephemeral_xyz"):
+        other.restore(str(tmp_path))
+
+
 # ---------------------------------------------------------------------------
 # topk_reduce / overlap_a2a: sparsified & overlap-aware exchanges
 # ---------------------------------------------------------------------------

@@ -8,11 +8,19 @@ pytest.importorskip("hypothesis")   # don't abort collection without it
 
 from hypothesis import given, settings, strategies as st
 
+from repro.api import autotune
+from repro.api.strategies import (StrategyContext, get_strategy,
+                                  list_strategies)
 from repro.core import hot_sharding, sparse
 from repro.kernels import ops
 from repro.optim import compression
 
 SET = dict(max_examples=25, deadline=None)
+
+# the built-in registry at import time (other test modules register
+# throwaway strategies at run time; the tuner properties are stated over
+# the shipped set)
+BUILTINS = tuple(list_strategies())
 
 
 @st.composite
@@ -154,3 +162,82 @@ def test_batch_defs_consistent(shape_name, arch):
         assert defs["tokens"].shape == (shape.global_batch, shape.seq_len)
     else:
         assert defs["tokens"].shape == (shape.global_batch, 1)
+
+
+# ---------------------------------------------------------------------------
+# analytic geometry autotuner (repro.api.autotune)
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def geometries(draw):
+    """Analytic StrategyContexts: power-of-two shard counts with the pod
+    factor dividing them, paper-plausible block/capacity ranges."""
+    po = draw(st.sampled_from([1, 2, 4]))
+    pi = 2 ** draw(st.integers(1, 6))
+    block = 2 ** draw(st.integers(7, 14))
+    cap = 2 ** draw(st.integers(4, 12))
+    frac = draw(st.sampled_from([0.05, 0.25, 1.0]))
+    return StrategyContext(axes=(), num_shards=po * pi, block_size=block,
+                           capacity=cap, outer_shards=po, topk_frac=frac)
+
+
+bandwidths = st.floats(1.0, 2000.0)
+
+
+@given(geometries(), bandwidths, bandwidths)
+@settings(**SET)
+def test_autotuner_choice_is_optimal(ctx, inner_gbps, outer_gbps):
+    """The chosen strategy never costs more than ANY candidate under the
+    same per-tier bandwidths (independently recomputed costs)."""
+    bw = autotune.WireBandwidth(inner_gbps, outer_gbps)
+    ranked = autotune.score_strategies(ctx, bw, strategies=BUILTINS)
+    chosen = autotune.choose_strategy(ctx, bw, strategies=BUILTINS)
+    assert chosen == ranked[0].name
+    for name in BUILTINS:
+        cost = autotune.wire_cost(
+            get_strategy(name).bytes_per_device(ctx), bw)
+        assert ranked[0].cost_s <= cost
+
+
+@given(geometries(), bandwidths, bandwidths, bandwidths)
+@settings(**SET)
+def test_autotuner_dcn_monotonicity(ctx, inner_gbps, bw_a, bw_b):
+    """Raising the DCN cost (slower outer tier) never flips the tuner
+    toward a strategy with MORE outer bytes — the exchange argument
+    (c1-c2)(1/bw1-1/bw2) <= 0, stated over the real registry."""
+    fast, slow = max(bw_a, bw_b), min(bw_a, bw_b)
+
+    def pick(outer_gbps):
+        return autotune.score_strategies(
+            ctx, autotune.WireBandwidth(inner_gbps, outer_gbps),
+            strategies=BUILTINS)[0]
+
+    assert pick(slow).wire.outer <= pick(fast).wire.outer
+
+
+@given(geometries(), bandwidths, bandwidths)
+@settings(**SET)
+def test_autotuner_ranking_deterministic(ctx, inner_gbps, outer_gbps):
+    """Same inputs -> same ranking, and ties break by name (the ranking
+    is exactly sorted by (cost, name))."""
+    bw = autotune.WireBandwidth(inner_gbps, outer_gbps)
+    r1 = autotune.score_strategies(ctx, bw, strategies=BUILTINS)
+    r2 = autotune.score_strategies(ctx, bw, strategies=BUILTINS)
+    assert [s.name for s in r1] == [s.name for s in r2]
+    keys = [(s.cost_s, s.name) for s in r1]
+    assert keys == sorted(keys)
+
+
+@given(geometries(), bandwidths, bandwidths)
+@settings(**SET)
+def test_autotuner_require_exact_filters_lossy(ctx, inner_gbps, outer_gbps):
+    """require_exact drops exactly the strategies that would carry
+    error-feedback state on THIS geometry, and never all of them (the
+    exact built-ins admit every geometry)."""
+    bw = autotune.WireBandwidth(inner_gbps, outer_gbps)
+    exact = autotune.score_strategies(ctx, bw, require_exact=True,
+                                      strategies=BUILTINS)
+    assert exact and all(not s.lossy for s in exact)
+    for s in exact:
+        assert get_strategy(s.name).init_carry(ctx) is None
