@@ -27,9 +27,11 @@ Known deviations (documented in EXPERIMENTS.md):
 """
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
+import sys
 
 from repro.configs import SHAPES, get_config
 from repro.configs.base import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
@@ -222,8 +224,20 @@ def _analytic_row(arch: str, shape_name: str) -> dict:
 def analyze(dryrun_dir: str = "results/dryrun",
             probe_dir: str = "results/probes",
             out_path: str | None = "results/roofline.json"):
+    paths = sorted(glob.glob(os.path.join(probe_dir, "*__probe.json")))
+    if not paths:
+        print(
+            f"roofline: no probe artifacts under {probe_dir!r} — nothing to "
+            "analyze.\nGenerate them first:\n"
+            "  python -m repro.launch.dryrun --all --out results/dryrun\n"
+            "  python -m repro.launch.dryrun --cell <arch>:<shape> --probe "
+            "--out results/probes\n"
+            "or run the strategy-wire mode, which needs no artifacts:\n"
+            "  python benchmarks/roofline.py --dpmr",
+            file=sys.stderr)
+        return []
     rows = []
-    for path in sorted(glob.glob(os.path.join(probe_dir, "*__probe.json"))):
+    for path in paths:
         probe = json.load(open(path))
         if probe.get("status") == "analytic":
             rows.append(_analytic_row(probe["arch"], probe["shape"]))
@@ -281,5 +295,54 @@ def print_table(rows):
               f"{100*r['roofline_fraction']:>6.1f}%")
 
 
+def dpmr_rows(bandwidth=None):
+    """DPMR-strategy roofline mode: price the sparse step's wire per
+    strategy per geometry from the SAME audited `WireBytes` declarations
+    the strategy contract auditor checks against traced jaxprs (rule
+    W-MATCH in `repro.analysis`), at the autotuner's per-tier planning
+    bandwidths (`repro.api.autotune.WireBandwidth`: ICI ~10x DCN). No
+    dry-run artifacts needed — this mode is purely analytic, the sparse
+    face's counterpart to the dense probe extrapolation above."""
+    from repro.analysis import build_contexts
+    from repro.api import autotune
+    from repro.api.strategies import get_strategy, list_strategies
+
+    bw = bandwidth or autotune.WireBandwidth()
+    rows = []
+    for actx in build_contexts():
+        for name in list_strategies():
+            wire = get_strategy(name).bytes_per_device(actx.ctx)
+            rows.append({
+                "geometry": actx.name, "strategy": name,
+                "inner_bytes": int(wire.inner), "outer_bytes": int(wire.outer),
+                "wire_s": autotune.wire_cost(wire, bw),
+            })
+    return rows
+
+
+def print_dpmr_table(rows):
+    hdr = (f"{'geometry':<12s} {'strategy':<22s} {'inner_B':>12s} "
+           f"{'outer_B':>12s} {'wire_us':>10s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in sorted(rows, key=lambda r: (r["geometry"], r["wire_s"])):
+        print(f"{r['geometry']:<12s} {r['strategy']:<22s} "
+              f"{r['inner_bytes']:>12d} {r['outer_bytes']:>12d} "
+              f"{1e6 * r['wire_s']:>10.2f}")
+
+
 if __name__ == "__main__":
-    print_table(analyze())
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dpmr", action="store_true",
+                    help="price the DPMR sparse step from the audited "
+                         "per-strategy WireBytes (no artifacts needed)")
+    ap.add_argument("--dryrun-dir", default="results/dryrun")
+    ap.add_argument("--probe-dir", default="results/probes")
+    ap.add_argument("--out", default="results/roofline.json")
+    a = ap.parse_args()
+    if a.dpmr:
+        print_dpmr_table(dpmr_rows())
+    else:
+        rows = analyze(a.dryrun_dir, a.probe_dir, a.out)
+        if rows:
+            print_table(rows)

@@ -175,6 +175,52 @@ print('composition smoke OK: compositions priced on both tiers, audited, '
       f'tuner winner at the paper regime = {winner}')
 "
 
+echo "== kernels: interpret-mode smoke on CPU (the kernel_impl seam) =="
+# the Pallas routing kernels run their python-interpret bodies against the
+# kernels/ref.py oracles: select_pack must be BIT-exact (selection + order),
+# owner_accumulate bit-exact on integer-valued grads; also proves the
+# docs/KERNELS.md worked example executes (tests/test_docs.py re-runs it)
+t 300 python -c "
+import numpy as np
+import jax.numpy as jnp
+from repro.kernels import ops, ref
+
+assert ops.normalize_impl('jnp') == 'xla'        # legacy alias maps over
+rng = np.random.default_rng(0)
+p, cap, k = 4, 64, 16
+ids = jnp.asarray(rng.integers(-1, 256, size=(p, cap)).astype(np.int32))
+send = jnp.where(ids >= 0,
+                 jnp.asarray(rng.normal(size=(p, cap)).astype(np.float32)),
+                 0.0)
+carry = jnp.where(ids >= 0,
+                  jnp.asarray(rng.normal(size=(p, cap)).astype(np.float32)),
+                  0.0)
+got = ops.select_pack(send, ids, carry, k=k, impl='pallas_interpret')
+want = ref.select_pack_ref(send, ids, carry, k=k)
+for g, w in zip(got, want):
+    np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+g_int = jnp.where(ids >= 0,
+                  jnp.asarray(rng.integers(-8, 9,
+                                           size=(p, cap)).astype(np.float32)),
+                  0.0)
+acc = jnp.zeros((256,), jnp.float32)
+r0 = ops.owner_accumulate(ids, g_int, acc, 0, impl='xla')
+r1 = ops.owner_accumulate(ids, g_int, acc, 0, impl='pallas_interpret')
+np.testing.assert_array_equal(np.asarray(r0), np.asarray(r1))
+print('kernels OK: select_pack + owner_accumulate interpret-mode bit-parity')
+"
+
+# the kernel guide's worked example, executed exactly as documented
+t 300 python -c "
+import pathlib, re
+text = pathlib.Path('docs/KERNELS.md').read_text()
+ns = {}
+for i, block in enumerate(re.findall(r'\`\`\`python\n(.*?)\`\`\`', text, re.S)):
+    exec(compile(block, f'docs/KERNELS.md#block{i}', 'exec'), ns)
+assert ns['kernel_demo_ok'] is True
+print('kernels OK: docs/KERNELS.md worked example runs in interpret mode')
+"
+
 echo "== docs link-check (every docs/*.md code path exists) =="
 t 120 python scripts/check_docs.py
 

@@ -53,6 +53,7 @@ from repro.core import dpmr, hot_sharding
 from repro.core.dpmr import StepFns
 from repro.data import DataSource, ShardedLoader, get_source
 from repro.data.loader import put_sharded
+from repro.kernels import ops
 
 
 def put_batch(batch: dict, mesh) -> dict:
@@ -113,8 +114,11 @@ class DPMREngine:
     ----------
     cfg:         DPMRConfig (features, strategy, optimizer, schedule, ...)
     mesh:        jax Mesh; every device is one DPMR node (samples + params)
-    kernel_impl: computeGradients map body ("jnp" | "pallas" |
-                 "pallas_interpret")
+    kernel_impl: hot-path lowering ("xla" | "pallas" | "pallas_interpret",
+                 see repro.kernels.ops.KERNEL_IMPLS): the computeGradients
+                 map body plus the routing kernels behind
+                 StrategyContext.kernel_impl. None defers to
+                 cfg.kernel_impl.
     cap_factor:  a2a capacity factor (slots per (src,dst) pair = cap_factor
                  x the uniform mean)
     hot_ids:     replicated Zipf-head ids (see `hot_ids_from_corpus`); None
@@ -125,13 +129,15 @@ class DPMREngine:
                  entry per distinct batch size forever)
     """
 
-    def __init__(self, cfg: DPMRConfig, mesh, *, kernel_impl: str = "jnp",
+    def __init__(self, cfg: DPMRConfig, mesh, *,
+                 kernel_impl: str | None = None,
                  cap_factor: float = 4.0, hot_ids=None,
                  state: dpmr.DPMRState | None = None,
                  max_cached_fns: int = 8):
         self.cfg = cfg
         self.mesh = mesh
-        self.kernel_impl = kernel_impl
+        self.kernel_impl = ops.normalize_impl(
+            cfg.kernel_impl if kernel_impl is None else kernel_impl)
         self.cap_factor = cap_factor
         if max_cached_fns < 1:
             raise ValueError(f"max_cached_fns must be >= 1: {max_cached_fns}")

@@ -89,6 +89,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import sparse
+from repro.kernels import ops
 from repro.optim import compression
 
 
@@ -132,6 +133,15 @@ class StrategyContext(NamedTuple):
     #                          slots (k = ceil(topk_frac * capacity));
     #                          threaded from DPMRConfig.topk_frac by
     #                          core.dpmr.make_strategy_context
+    kernel_impl: str = "xla"  # lowering of the routing hot path
+    #                          (repro.kernels.ops.KERNEL_IMPLS): "xla" =
+    #                          the reference jnp chain, "pallas"/"pallas_
+    #                          interpret" = the fused kernels. Threaded
+    #                          from DPMRConfig.kernel_impl by
+    #                          core.dpmr.make_step_fns; strategies consult
+    #                          it through kernels.ops dispatchers only, so
+    #                          collectives (and the audited wire model)
+    #                          are identical across impls.
 
     @property
     def inner_shards(self) -> int:
@@ -176,6 +186,17 @@ class DistributionStrategy:
 
 def _owner_base(ctx: StrategyContext) -> jax.Array:
     return jax.lax.axis_index(ctx.axes) * ctx.block_size
+
+
+def _owner_accumulate(ctx: StrategyContext, req_ids, grads, acc_local,
+                      base):
+    """The reverse-shuffle scatter-add behind the `kernel_impl` seam:
+    `ctx.kernel_impl="xla"` is `sparse.owner_accumulate`'s scatter-add,
+    the pallas impls reduce sorted runs with the masked-matmul
+    `segment_sum_sorted` combiner first (one owner add per unique
+    feature). Dispatch lives in `repro.kernels.ops.owner_accumulate`."""
+    return ops.owner_accumulate(req_ids, grads, acc_local, base,
+                                impl=ctx.kernel_impl)
 
 
 def _chunked_all_to_all(x: jax.Array, axes, num_chunks: int) -> jax.Array:
@@ -245,9 +266,9 @@ class AllToAllStrategy(DistributionStrategy):
     def reduce(self, ctx, cold_loc, grads_flat, fwd):
         send = sparse.combine_grads(fwd["routing"], grads_flat)
         recv = jax.lax.all_to_all(send, ctx.axes, 0, 0, tiled=True)
-        return sparse.owner_accumulate(fwd["req_recv"], recv,
-                                       jnp.zeros_like(cold_loc),
-                                       _owner_base(ctx))
+        return _owner_accumulate(ctx, fwd["req_recv"], recv,
+                                 jnp.zeros_like(cold_loc),
+                                 _owner_base(ctx))
 
     def bytes_per_device(self, ctx):
         # 3 (P, cap) f32 buffers (requests, responses, grad sums); a
@@ -400,8 +421,8 @@ class HierarchicalA2AStrategy(DistributionStrategy):
         recv = jax.lax.all_to_all(send, ctx.inner_axes, 0, 0,
                                   tiled=True)
         base = jax.lax.axis_index(ctx.inner_axes) * (po * block)
-        return sparse.owner_accumulate(
-            fwd["req_recv"], recv,
+        return _owner_accumulate(
+            ctx, fwd["req_recv"], recv,
             jnp.zeros((po * block,), grads_flat.dtype), base)
 
     def reduce(self, ctx, cold_loc, grads_flat, fwd):
@@ -409,9 +430,9 @@ class HierarchicalA2AStrategy(DistributionStrategy):
         if po == 1:
             send = sparse.combine_grads(fwd["routing"], grads_flat)
             recv = jax.lax.all_to_all(send, ctx.axes, 0, 0, tiled=True)
-            return sparse.owner_accumulate(fwd["req_recv"], recv,
-                                           jnp.zeros_like(cold_loc),
-                                           _owner_base(ctx))
+            return _owner_accumulate(ctx, fwd["req_recv"], recv,
+                                     jnp.zeros_like(cold_loc),
+                                     _owner_base(ctx))
         mirror_acc = self._mirror_accumulate(ctx, cold_loc, grads_flat, fwd)
         # per-pod partials cross DCN exactly once: segment q of the mirror
         # accumulator is pod q's owner block, summed across pods
@@ -555,39 +576,37 @@ class TopKReduceStrategy(DistributionStrategy):
             # wire savings apply to the per-step (SGD) path only.
             send = sparse.combine_grads(fwd["routing"], grads_flat)
             recv = jax.lax.all_to_all(send, ctx.axes, 0, 0, tiled=True)
-            grad = sparse.owner_accumulate(fwd["req_recv"], recv,
-                                           jnp.zeros_like(cold_loc),
-                                           _owner_base(ctx))
+            grad = _owner_accumulate(ctx, fwd["req_recv"], recv,
+                                     jnp.zeros_like(cold_loc),
+                                     _owner_base(ctx))
             return grad, fwd["carry"]
         f = ctx.num_shards * ctx.block_size
         k = self._k(ctx)
         send = sparse.combine_grads(fwd["routing"], grads_flat)  # (P, cap)
         ids = fwd["routing"].req_ids                             # (P, cap)
         valid = ids >= 0
-        # error feedback: every live slot is compensated with the residual
-        # its feature banked the last time it lost the top-k race
-        comp = jnp.where(valid,
-                         send + fwd["carry"][jnp.clip(ids, 0, f - 1)], 0.0)
-        # per destination row, keep the k largest-|comp| live slots; dead
-        # slots rank below every live one so they are picked only when a
-        # row has fewer than k live slots (their id -1 no-ops at the owner)
-        key = jnp.where(valid, jnp.abs(comp), -1.0)
-        top_idx, top_mask = compression.topk_select(key, k)      # (P, k)
-        ids_k = jnp.take_along_axis(ids, top_idx, axis=1)
-        vals_k = jnp.where(ids_k >= 0,
-                           jnp.take_along_axis(comp, top_idx, axis=1), 0.0)
-        sel = top_mask & valid                                   # (P, cap)
-        # residual update: selected features flushed to zero, losers bank
+        # fused compensate + rank-by-|magnitude| + pack: every live slot is
+        # compensated with the residual its feature banked the last time it
+        # lost the top-k race, each destination row keeps its k
+        # largest-|comp| live slots, and losers bank their compensated
+        # value as the new residual — one kernels.ops.select_pack call
+        # (`kernel_impl="xla"` runs the original five-op chain, see
+        # kernels/ref.py:select_pack_ref; the Pallas kernel is bit-exact)
+        carry_slots = fwd["carry"][jnp.clip(ids, 0, f - 1)]
+        vals_k, ids_k, resid = ops.select_pack(send, ids, carry_slots,
+                                               k=k, impl=ctx.kernel_impl)
+        # residual scatter: selected features flushed to zero, losers bank
         # their compensated slot (feature ids are unique per device, so a
-        # plain scatter-set is race-free; absent features keep theirs)
+        # plain scatter-set is race-free; absent features keep theirs, and
+        # invalid slots are dropped)
         new_carry = fwd["carry"].at[
             jnp.where(valid, ids, f).reshape(-1)
-        ].set(jnp.where(sel, 0.0, comp).reshape(-1), mode="drop")
+        ].set(resid.reshape(-1), mode="drop")
         v_recv = jax.lax.all_to_all(vals_k, ctx.axes, 0, 0, tiled=True)
         i_recv = jax.lax.all_to_all(ids_k, ctx.axes, 0, 0, tiled=True)
-        grad = sparse.owner_accumulate(i_recv, v_recv,
-                                       jnp.zeros_like(cold_loc),
-                                       _owner_base(ctx))
+        grad = _owner_accumulate(ctx, i_recv, v_recv,
+                                 jnp.zeros_like(cold_loc),
+                                 _owner_base(ctx))
         return grad, new_carry
 
     def bytes_per_device(self, ctx):
@@ -631,9 +650,9 @@ class OverlapA2AStrategy(AllToAllStrategy):
     def reduce(self, ctx, cold_loc, grads_flat, fwd):
         send = sparse.combine_grads(fwd["routing"], grads_flat)
         recv = self._a2a(ctx, send)
-        return sparse.owner_accumulate(fwd["req_recv"], recv,
-                                       jnp.zeros_like(cold_loc),
-                                       _owner_base(ctx))
+        return _owner_accumulate(ctx, fwd["req_recv"], recv,
+                                 jnp.zeros_like(cold_loc),
+                                 _owner_base(ctx))
 
 
 class OuterLeg:

@@ -205,6 +205,16 @@ class DPMRConfig:
     #                                  (k = ceil(topk_frac * cap)); the rest
     #                                  feed the error-feedback residual.
     #                                  1.0 degenerates to the full shuffle.
+    kernel_impl: str = "xla"         # lowering of the routing hot path
+    #                                  (repro.kernels.ops.KERNEL_IMPLS):
+    #                                  "xla" = the pure-jnp reference chain
+    #                                  (default; CPU/GPU-safe), "pallas" =
+    #                                  the TPU kernels (fused select+pack,
+    #                                  masked-matmul segment-sum reduce),
+    #                                  "pallas_interpret" = kernels run in
+    #                                  python on CPU (testing). Threaded to
+    #                                  every strategy via
+    #                                  StrategyContext.kernel_impl.
     grad_scale: str = "mean"         # mean | sum (paper: sum, full-batch GD)
     optimizer: str = "sgd"           # any name in optim.SPARSE_OPTIMIZERS
     #                                  (sgd = the paper's GD; adagrad /

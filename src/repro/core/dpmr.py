@@ -95,22 +95,28 @@ def capacity(cfg: DPMRConfig, batch_local: int, mesh,
     return capacity_for_shards(cfg, batch_local, num_shards(mesh), factor)
 
 
-def make_strategy_context(cfg: DPMRConfig, mesh, cap: int = 0):
+def make_strategy_context(cfg: DPMRConfig, mesh, cap: int = 0,
+                          kernel_impl: str | None = None):
     """The `StrategyContext` for this (cfg, mesh) geometry: all mesh axes,
     factored into the (outer=DCN, inner=ICI) wire tiers by
     `launch.mesh.tier_axes`. `cap` is the per-(src,dst) a2a capacity
-    (batch-size dependent; 0 where only the static geometry matters)."""
+    (batch-size dependent; 0 where only the static geometry matters).
+    `kernel_impl` overrides `cfg.kernel_impl` (None = use the config)."""
     # late import: repro.api.strategies imports from repro.core
     from repro.api.strategies import StrategyContext
+    from repro.kernels import ops
     from repro.launch.mesh import tier_axes, tier_shards
 
     outer, inner = tier_axes(mesh)
     po, _ = tier_shards(mesh)
     p = num_shards(mesh)
+    impl = ops.normalize_impl(
+        cfg.kernel_impl if kernel_impl is None else kernel_impl)
     return StrategyContext(axes=_axes(mesh), num_shards=p,
                            block_size=padded_features(cfg, mesh) // p,
                            capacity=cap, inner_axes=inner, outer_axes=outer,
-                           outer_shards=po, topk_frac=cfg.topk_frac)
+                           outer_shards=po, topk_frac=cfg.topk_frac,
+                           kernel_impl=impl)
 
 
 _AUTOTUNE_BATCH_LOCAL = 128
@@ -280,11 +286,18 @@ class StepFns(NamedTuple):
 
 
 def make_step_fns(cfg: DPMRConfig, mesh, batch_size: int,
-                  kernel_impl: str = "jnp",
+                  kernel_impl: str | None = None,
                   cap_factor: float = 4.0) -> StepFns:
     """Build jitted StepFns(train_step, grad_step, apply_update, predict)
     for a GLOBAL batch of `batch_size` samples (sharded over all mesh
-    axes)."""
+    axes).
+
+    `kernel_impl` picks the hot-path lowering ("xla" | "pallas" |
+    "pallas_interpret", see repro.kernels.ops.KERNEL_IMPLS); None defers
+    to `cfg.kernel_impl`. It reaches the strategies through
+    `StrategyContext.kernel_impl` and the map body through
+    `ops.sigmoid_grad`, never the collectives — the wire layout is
+    impl-independent by construction."""
     # late import: repro.api.engine imports this module
     from repro.api.strategies import get_strategy
 
@@ -296,7 +309,9 @@ def make_step_fns(cfg: DPMRConfig, mesh, batch_size: int,
     cap = capacity(cfg, batch_size // p, mesh, cap_factor)
     dist = resolve_distribution(cfg, mesh)
     strategy = get_strategy(dist)
-    ctx = make_strategy_context(cfg, mesh, cap)
+    kernel_impl = ops.normalize_impl(
+        cfg.kernel_impl if kernel_impl is None else kernel_impl)
+    ctx = make_strategy_context(cfg, mesh, cap, kernel_impl=kernel_impl)
     stateful = strategy.init_carry(ctx) is not None
     sched = make_schedule(cfg)
 

@@ -1,3 +1,18 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the DPMR hot path, behind the `kernel_impl` seam.
+
+Layout (the authoring contract lives in docs/KERNELS.md):
+  ops.py              the seam: per-op dispatchers selecting the kernel
+                      or its oracle from `impl` — strategies and step fns
+                      import ONLY this module
+  ref.py              pure-jnp oracles; the `impl="xla"` production path
+                      and the bit-parity ground truth of every kernel
+  sigmoid_grad.py     computeGradients map body (Alg. 6)
+  select_pack.py      topk_reduce's fused compensate + rank + pack
+  segment_sum.py      sorted per-feature run sums (the Alg. 6 combiner;
+                      powers ops.owner_accumulate's pallas path)
+  flash_attention.py  dense-face attention, reference-grade (no sparse-
+                      path caller)
+
+Tested by tests/test_kernels.py (interpret mode, CPU); priced by
+benchmarks/kernel_microbench.py.
+"""

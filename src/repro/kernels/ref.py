@@ -1,4 +1,13 @@
-"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+REFERENCE-ONLY module: nothing here is a production path. Every oracle is
+the semantics contract its kernel is tested against (tests/test_kernels.py
+sweeps interpret-mode kernels vs these), and `impl="jnp"`/`"xla"` in
+`kernels.ops` dispatches HERE — that pure-XLA lowering is the default
+production path on CPU/GPU and the fallback on TPU. The Pallas kernels
+(`impl="pallas"`) are the TPU hot path; see docs/KERNELS.md for which
+production call sites route to which kernel.
+"""
 from __future__ import annotations
 
 import math
@@ -42,6 +51,29 @@ def segment_sum_sorted_ref(ids, grads):
     g = jnp.where(valid, grads, 0.0)
     sums = jax.ops.segment_sum(g, jnp.clip(seg, 0), num_segments=ids.shape[0])
     return jnp.where(is_end, sums[jnp.clip(seg, 0)], 0.0)
+
+
+def select_pack_ref(send, ids, carry_slots, *, k: int):
+    """Fused top-k select+pack oracle — the exact XLA chain the
+    `topk_reduce` strategy ran before the kernel existed.
+
+    send, carry_slots: (P, cap) f32; ids: (P, cap) int32 (-1 = empty);
+    k from `repro.optim.compression.topk_count`. Returns
+    (vals_k (P, k), ids_k (P, k), residual (P, cap)) — see
+    `select_pack.select_pack` for the semantics; this chain and the kernel
+    must agree BIT-exactly (ranking order included).
+    """
+    from repro.optim import compression
+
+    valid = ids >= 0
+    comp = jnp.where(valid, send + carry_slots, 0.0)
+    key = jnp.where(valid, jnp.abs(comp), -1.0)
+    top_idx, top_mask = compression.topk_select(key, k)
+    ids_k = jnp.take_along_axis(ids, top_idx, axis=1)
+    vals_k = jnp.where(ids_k >= 0,
+                       jnp.take_along_axis(comp, top_idx, axis=1), 0.0)
+    residual = jnp.where(top_mask & valid, 0.0, comp)
+    return vals_k, ids_k, residual
 
 
 def flash_attention_ref(q, k, v, *, causal: bool = True):

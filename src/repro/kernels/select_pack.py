@@ -1,0 +1,132 @@
+"""Pallas TPU kernel: fused top-k select+pack for the sparsified reduce.
+
+The `topk_reduce` strategy's reverse shuffle (repro/api/strategies.py)
+prepares its wire payload with a chain of five XLA ops over the (P, cap)
+send buffer: compensate with the error-feedback residual, build a |value|
+ranking key, `jax.lax.top_k`, two `take_along_axis` gathers to pack the
+(value, id) pairs, and a `where` to bank the losers' residual. Each op is
+an HBM round trip over the buffer. This kernel is the whole chain in ONE
+pass: each grid step holds one destination row in VMEM, ranks its slots,
+and emits the packed pairs plus the residual update without materializing
+any intermediate.
+
+Ranking is comparison-matrix style (the same MXU-shaped trick as
+segment_sum's equality mask): rank[i] counts slots that beat slot i —
+strictly larger key, or equal key at an earlier position. That total
+order is exactly `jax.lax.top_k`'s (descending value, ties by position),
+so the kernel's selection set and output ORDER are bit-identical to the
+reference chain; packing is a one-hot matmul `vals_k[r] = sum_i comp[i] *
+[rank[i] == r]` with exactly one live term per output slot, so no
+floating-point reassociation happens anywhere. `k` must come from
+`repro.optim.compression.topk_count` (the strategy passes it through) so
+kernel and wire model cannot disagree.
+
+The (cap, cap) comparison mask bounds the practical capacity: cap = 4096
+is a 64 MB f32 mask, the VMEM ceiling of one grid step. The strategy seam
+falls back to the XLA chain above `MAX_CAPACITY`; production capacities
+(4x the mean slots-per-peer, core.dpmr.capacity) sit far below it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# largest per-(src,dst) capacity the one-row-per-grid-step layout handles
+# before the (cap, cap) ranking mask outgrows VMEM; ops.select_pack and the
+# strategy seam fall back to the XLA chain past this
+MAX_CAPACITY = 4096
+
+
+def _kernel(send_ref, ids_ref, carry_ref, vals_ref, idsk_ref, resid_ref,
+            *, cap: int, k: int):
+    ids = ids_ref[...]                                  # (1, cap) int32
+    valid = ids >= 0
+    comp = jnp.where(valid,
+                     send_ref[...].astype(jnp.float32)
+                     + carry_ref[...].astype(jnp.float32), 0.0)
+    # dead slots rank below every live one (key -1 < |comp| >= 0); they are
+    # picked only when a row has fewer than k live slots, and their id -1
+    # no-ops at the owner — same convention as the XLA chain
+    key = jnp.where(valid, jnp.abs(comp), -1.0)
+
+    # rank[i] = #{j : key[j] > key[i], or key[j] == key[i] and j < i} —
+    # jax.lax.top_k's total order (descending, ties by position), built as
+    # a (cap, cap) comparison mask and reduced along the j axis
+    key_t = key.reshape(cap, 1)                         # key[j] down rows
+    jpos = jax.lax.broadcasted_iota(jnp.int32, (cap, cap), 0)
+    ipos = jax.lax.broadcasted_iota(jnp.int32, (cap, cap), 1)
+    beats = (key_t > key) | ((key_t == key) & (jpos < ipos))
+    rank = jnp.sum(beats.astype(jnp.int32), axis=0).reshape(1, cap)
+
+    selected = rank < k
+    # residual update in the same pass: winners flush to zero, losers bank
+    # their full compensated value (invalid slots are dropped by the
+    # caller's scatter, their content is irrelevant but kept = comp = 0)
+    resid_ref[...] = jnp.where(selected & valid, 0.0, comp).astype(
+        resid_ref.dtype)
+
+    # pack by rank: ranks are a permutation of 0..cap-1 (the order above is
+    # total), so output slot r has exactly ONE source — the one-hot matmul
+    # moves each winner without summing anything against anything
+    rpos = jax.lax.broadcasted_iota(jnp.int32, (cap, k), 1)
+    onehot = rank.reshape(cap, 1) == rpos               # (cap, k)
+    ids_k = jnp.sum(jnp.where(onehot, ids.reshape(cap, 1), 0),
+                    axis=0).reshape(1, k)
+    # rows with < k live slots pack dead slots: emit id -1 explicitly
+    # (the int32 sum above yields 0-filled columns only if a rank is
+    # missing, which cannot happen; dead slots carry their own -1)
+    vals_k = jnp.dot(comp, onehot.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)  # (1, k)
+    idsk_ref[...] = ids_k.astype(idsk_ref.dtype)
+    vals_ref[...] = jnp.where(ids_k >= 0, vals_k, 0.0).astype(
+        vals_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def select_pack(send, ids, carry_slots, *, k: int, interpret: bool = True):
+    """Fused compensate + rank-by-|magnitude| + pack for one (P, cap)
+    destination buffer.
+
+    send:        (P, cap) f32 per-destination gradient sums
+    ids:         (P, cap) int32 global feature ids (-1 = empty slot)
+    carry_slots: (P, cap) f32 error-feedback residual gathered per slot
+                 (`carry[ids]`; the gather/scatter against the (F,) carry
+                 stays outside — it is not blockable by destination row)
+    k:           slots kept per destination; MUST be
+                 `compression.topk_count(cap, frac)`
+
+    Returns (vals_k (P, k) f32, ids_k (P, k) int32, residual (P, cap) f32)
+    where residual is the per-slot carry update (0 for selected slots, the
+    compensated value for losers), bit-identical to the XLA chain in
+    `TopKReduceStrategy.reduce`.
+    """
+    p, cap = ids.shape
+    if cap > MAX_CAPACITY:
+        raise ValueError(
+            f"select_pack capacity {cap} exceeds MAX_CAPACITY "
+            f"{MAX_CAPACITY} (the (cap, cap) ranking mask would outgrow "
+            "VMEM); use the XLA chain for this geometry")
+    row = lambda i: (i, 0)  # noqa: E731
+    return pl.pallas_call(
+        functools.partial(_kernel, cap=cap, k=k),
+        grid=(p,),
+        in_specs=[
+            pl.BlockSpec((1, cap), row),
+            pl.BlockSpec((1, cap), row),
+            pl.BlockSpec((1, cap), row),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), row),
+            pl.BlockSpec((1, k), row),
+            pl.BlockSpec((1, cap), row),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p, k), jnp.float32),
+            jax.ShapeDtypeStruct((p, k), jnp.int32),
+            jax.ShapeDtypeStruct((p, cap), jnp.float32),
+        ],
+        interpret=interpret,
+    )(send, ids, carry_slots)

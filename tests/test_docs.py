@@ -12,6 +12,7 @@ import numpy as np
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 STRATEGIES_DOC = ROOT / "docs" / "strategies.md"
 ARCHITECTURE_DOC = ROOT / "docs" / "ARCHITECTURE.md"
+KERNELS_DOC = ROOT / "docs" / "KERNELS.md"
 
 
 def _python_blocks(path: pathlib.Path):
@@ -47,6 +48,29 @@ def test_strategies_guide_example_runs():
     assert ns["wire"].total == ns["wire"].inner + ns["wire"].outer
     from repro.api import list_strategies
     assert "doc_rowcast" in list_strategies()
+
+
+def test_kernels_guide_names_the_contract():
+    assert KERNELS_DOC.exists()
+    text = KERNELS_DOC.read_text()
+    # the load-bearing pieces of the kernel-authoring surface
+    for needle in ("kernel_impl", "BlockSpec", "interpret", "MAX_CAPACITY",
+                   "normalize_impl", "broadcasted_iota", "topk_count",
+                   "bit-exact", "scratch"):
+        assert needle in text, f"KERNELS.md lost its {needle} section"
+
+
+def test_kernels_guide_example_runs():
+    """Every ```python block in docs/KERNELS.md executes top to bottom in
+    one namespace: the minimal kernel runs in interpret mode on CPU and
+    its parity check against the jnp oracle passes. A doc edit that
+    breaks the worked example breaks this test."""
+    blocks = _python_blocks(KERNELS_DOC)
+    assert len(blocks) >= 2, "the kernel guide lost its code blocks"
+    ns = {}
+    for i, block in enumerate(blocks):
+        exec(compile(block, f"{KERNELS_DOC}#block{i}", "exec"), ns)
+    assert ns["kernel_demo_ok"] is True
 
 
 def test_docs_link_check_passes():
