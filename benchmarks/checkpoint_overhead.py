@@ -1,0 +1,185 @@
+"""Checkpoint overhead benchmark: what the step path pays, sync vs async.
+
+Measures the async-checkpointing tentpole and emits
+`BENCH_checkpoint.json` with the shared envelope (`name` / `config` /
+`results`):
+
+  ledger      DETERMINISTIC byte ledger of the step path. A synchronous
+              save blocks training on the device->host gather PLUS the
+              full serialize+fsync+rename of every array file and the
+              manifest; an async save blocks on the gather only (the
+              snapshot that makes donation safe) and ships the bytes
+              from a background thread. Both sides are exact functions
+              of the state pytree (leaf nbytes; actual on-disk file
+              sizes from a real save), so the reduction ratio is the
+              `primary_metric` the nightly regression gate compares —
+              wall clock on a shared runner is noise, the ledger is not.
+  parity      async and sync saves of the same state produce
+              byte-identical array files (asserted, recorded) — the
+              correctness floor under the performance claim.
+  wall_ms     measured save-call latency (sync return vs async return
+              vs async background drain) — informational, machine-
+              dependent, NOT gated.
+
+    PYTHONPATH=src python benchmarks/checkpoint_overhead.py
+    PYTHONPATH=src python benchmarks/checkpoint_overhead.py --features 65536
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.api import DPMREngine
+from repro.ckpt.checkpointer import Checkpointer
+from repro.configs.base import DPMRConfig
+from repro.data import get_source
+from repro.launch.mesh import make_host_mesh
+
+
+def _engine(features: int, steps: int = 4) -> DPMREngine:
+    cfg = DPMRConfig(num_features=features, max_features_per_sample=8)
+    eng = DPMREngine(cfg, make_host_mesh(1, 1))
+    src = get_source("zipf_sparse", batch_size=32, num_batches=8,
+                     num_features=features, features_per_sample=8, seed=5)
+    eng.fit_sgd(src.iter_batches(), steps=steps)
+    return eng
+
+
+def _dir_file_bytes(step_dir: str) -> dict:
+    sizes = {name: os.path.getsize(os.path.join(step_dir, name))
+             for name in sorted(os.listdir(step_dir))}
+    return sizes
+
+
+def bench_ledger(eng: DPMREngine, tmp: str) -> dict:
+    """The deterministic step-path ledger, from one real sync save."""
+    leaves = jax.tree.leaves(eng.state)
+    gather_bytes = int(sum(l.nbytes for l in leaves))
+    d = os.path.join(tmp, "ledger")
+    step = eng.save(d, block=True)
+    step_dir = os.path.join(d, f"step_{step:010d}")
+    sizes = _dir_file_bytes(step_dir)
+    serialize_bytes = int(sum(sizes.values()))
+    sync_blocking = gather_bytes + serialize_bytes
+    async_blocking = gather_bytes
+    return {
+        "num_leaves": len(leaves),
+        "gather_bytes": gather_bytes,
+        "serialize_bytes": serialize_bytes,
+        "manifest_bytes": sizes["manifest.json"],
+        "sync_step_path_bytes": sync_blocking,
+        "async_step_path_bytes": async_blocking,
+        "step_path_bytes_reduction_x": round(
+            sync_blocking / async_blocking, 4),
+    }
+
+
+def bench_parity(eng: DPMREngine, tmp: str) -> dict:
+    """Async file bytes must equal sync file bytes for the same state."""
+    ck_s = Checkpointer(os.path.join(tmp, "sync"))
+    ck_a = Checkpointer(os.path.join(tmp, "async"))
+    ck_s.save(1, eng.state, block=True)
+    ck_a.save(1, eng.state, block=False)
+    ck_a.wait()
+    d_s = os.path.join(tmp, "sync", "step_0000000001")
+    d_a = os.path.join(tmp, "async", "step_0000000001")
+    names = sorted(os.listdir(d_s))
+    assert names == sorted(os.listdir(d_a)), (names, os.listdir(d_a))
+    checked = 0
+    for name in names:
+        if name == "manifest.json":
+            continue
+        with open(os.path.join(d_s, name), "rb") as f_s, \
+                open(os.path.join(d_a, name), "rb") as f_a:
+            assert f_s.read() == f_a.read(), f"{name} differs sync vs async"
+        checked += 1
+    return {"bit_exact_vs_sync": True, "array_files_checked": checked}
+
+
+def bench_wall(eng: DPMREngine, tmp: str, repeats: int) -> dict:
+    """Measured (informational): how long does save() hold the loop?"""
+    sync_ms, async_ms, drain_ms = [], [], []
+    for i in range(repeats):
+        d = os.path.join(tmp, f"wall_{i}")
+        ck = Checkpointer(os.path.join(d, "s"))
+        t0 = time.perf_counter()
+        ck.save(1, eng.state, block=True)
+        sync_ms.append((time.perf_counter() - t0) * 1e3)
+        ck = Checkpointer(os.path.join(d, "a"))
+        t0 = time.perf_counter()
+        ck.save(1, eng.state, block=False)
+        async_ms.append((time.perf_counter() - t0) * 1e3)
+        t0 = time.perf_counter()
+        ck.wait()
+        drain_ms.append((time.perf_counter() - t0) * 1e3)
+    med = lambda xs: round(float(np.median(xs)), 3)  # noqa: E731
+    return {"repeats": repeats,
+            "sync_save_ms_p50": med(sync_ms),
+            "async_save_return_ms_p50": med(async_ms),
+            "async_drain_ms_p50": med(drain_ms)}
+
+
+def run(features: int = 1 << 16, repeats: int = 5,
+        write_json: bool = True, out_dir: str = ".") -> dict:
+    eng = _engine(features)
+    tmp = tempfile.mkdtemp(prefix="ckpt_bench_")
+    try:
+        results = {
+            "ledger": bench_ledger(eng, tmp),
+            "parity": bench_parity(eng, tmp),
+            "wall_ms": bench_wall(eng, tmp, repeats),
+        }
+    finally:
+        eng.wait_saves()
+        shutil.rmtree(tmp, ignore_errors=True)
+    out = {
+        "name": "checkpoint_overhead",
+        "config": {"num_features": features,
+                   "max_features_per_sample": 8,
+                   "train_steps": 4, "wall_repeats": repeats},
+        # deterministic: byte counts from leaf shapes + real npy files —
+        # safe to regression-gate at 20% where wall clock would flag noise
+        "primary_metric": {
+            "path": "results.ledger.step_path_bytes_reduction_x",
+            "higher_is_better": True},
+        "results": results,
+    }
+    if write_json:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, "BENCH_checkpoint.json"), "w") as fh:
+            json.dump(out, fh, indent=2)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--features", type=int, default=1 << 16)
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--out", default=".", help="BENCH_checkpoint.json dir")
+    args = ap.parse_args()
+    out = run(features=args.features, repeats=args.repeats,
+              out_dir=args.out)
+    led = out["results"]["ledger"]
+    print(f"step path: sync blocks on {led['sync_step_path_bytes']:,} B, "
+          f"async on {led['async_step_path_bytes']:,} B "
+          f"({led['step_path_bytes_reduction_x']}x less)")
+    w = out["results"]["wall_ms"]
+    print(f"wall (p50 of {w['repeats']}): sync save "
+          f"{w['sync_save_ms_p50']} ms, async return "
+          f"{w['async_save_return_ms_p50']} ms, async drain "
+          f"{w['async_drain_ms_p50']} ms")
+    print(f"parity: {out['results']['parity']['array_files_checked']} "
+          f"array files bit-identical sync vs async")
+    print(f"wrote {os.path.join(args.out, 'BENCH_checkpoint.json')}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -282,6 +282,47 @@ print(f'serving OK: 8 requests, {m[\"flushes\"]} flushes, '
       f'{m.get(\"cache_hits\", 0)} cache hits, bit-exact vs predict')
 "
 
+echo "== async-checkpoint roundtrip smoke (snapshot, atomic manifest) =="
+# the crash-consistency contract end to end on a tiny engine: an async
+# save returns before serialization finishes yet restores bit-exactly
+# even though training immediately donates the saved buffers; a torn
+# manifest makes that step invisible (restore falls back to the previous
+# complete one); tests/test_checkpoint.py holds the full matrix
+t 300 python -c "
+import os, tempfile, warnings
+import numpy as np
+from repro.api import DPMREngine
+from repro.configs.base import DPMRConfig
+from repro.data import get_source
+from repro.launch.mesh import make_host_mesh
+from repro.runtime.multiprocess import host_value
+
+warnings.simplefilter('ignore', RuntimeWarning)  # detached-cursor notice
+tmp = tempfile.mkdtemp()
+cfg = DPMRConfig(num_features=1 << 10, max_features_per_sample=8)
+src = get_source('zipf_sparse', batch_size=16, num_batches=8,
+                 num_features=1 << 10, features_per_sample=8, seed=0)
+eng = DPMREngine(cfg, make_host_mesh(1, 1))
+eng.fit_sgd(src.iter_batches(), steps=2)
+snap = np.asarray(host_value(eng.state.cold)).copy()
+eng.save(tmp, block=False)            # async: snapshot now, write later
+eng.fit_sgd(src.iter_batches(), steps=2)   # donates the live buffers
+eng.save(tmp, block=False)
+eng.wait_saves()
+fresh = DPMREngine(cfg, make_host_mesh(1, 1))
+man = fresh.restore(tmp)
+assert man['step'] == 4, man['step']
+mpath = os.path.join(tmp, 'step_0000000004', 'manifest.json')
+raw = open(mpath, 'rb').read()
+open(mpath, 'wb').write(raw[: len(raw) // 2])   # torn manifest
+fresh2 = DPMREngine(cfg, make_host_mesh(1, 1))
+man2 = fresh2.restore(tmp)
+assert man2['step'] == 2, man2['step']
+np.testing.assert_array_equal(np.asarray(host_value(fresh2.state.cold)),
+                              snap)
+print('async checkpoint OK: snapshot isolation + torn-manifest fallback')
+"
+
 echo "== tier-1 tests (fast; -m 'not slow') =="
 # must stay under CI's 15-minute job cap so a hang fails HERE with a
 # section-level diagnostic, not as a generic job timeout (~7 min healthy).

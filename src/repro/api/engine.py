@@ -54,6 +54,7 @@ from repro.core.dpmr import StepFns
 from repro.data import DataSource, ShardedLoader, get_source
 from repro.data.loader import put_sharded
 from repro.kernels import ops
+from repro.runtime import multiprocess
 
 
 def put_batch(batch: dict, mesh) -> dict:
@@ -143,6 +144,7 @@ class DPMREngine:
             raise ValueError(f"max_cached_fns must be >= 1: {max_cached_fns}")
         self.max_cached_fns = max_cached_fns
         self._fns: dict[int, StepFns] = {}
+        self._checkpointers: dict[str, Checkpointer] = {}
         self._loader: ShardedLoader | None = None
         self._schedule = dpmr.make_schedule(cfg)
         with compat.set_mesh(mesh):
@@ -319,7 +321,10 @@ class DPMREngine:
         with compat.set_mesh(self.mesh):
             probs = fns.predict(self.state, self.put_batch(
                 {k: batch[k] for k in ("ids", "vals")}))
-        return np.asarray(probs)
+        # host_value, not np.asarray: under real multi-process execution
+        # the result is a global array spanning processes, and every
+        # process gets the full probability vector (collective gather)
+        return multiprocess.host_value(probs)
 
     def bucket_for(self, n: int, buckets: Iterable[int] | None = None) -> int:
         """The padded batch size `predict_padded` would run `n` rows at.
@@ -388,9 +393,34 @@ class DPMREngine:
 
     # -- checkpointing -------------------------------------------------------
 
+    def _checkpointer(self, directory: str, keep: int = 3) -> Checkpointer:
+        """One long-lived Checkpointer per directory: `save(block=False)`
+        hands its write thread to an object that survives until the next
+        save (which joins it) — a throwaway instance per call would orphan
+        the thread and allow two concurrent writers."""
+        ck = self._checkpointers.get(directory)
+        if ck is None:
+            ck = self._checkpointers[directory] = Checkpointer(
+                directory, keep=keep)
+        ck.keep = keep
+        return ck
+
+    def wait_saves(self) -> None:
+        """Join any in-flight async checkpoint writes (call before process
+        exit; `save(block=True)` and every subsequent save also join)."""
+        for ck in self._checkpointers.values():
+            ck.wait()
+
     def save(self, directory: str, *, keep: int = 3, block: bool = True,
              loader: ShardedLoader | None = None) -> int:
         """Atomic checkpoint of the sparse state; returns the step saved.
+
+        `block=False` keeps only the device->host snapshot on the step
+        path and serializes/fsyncs on a background thread (the snapshot is
+        taken before returning, so the training loop may immediately
+        mutate/donate the live state). Under real multi-process execution
+        every process must call this (the gather is collective); only
+        process 0 writes.
 
         The data cursor of `loader` (default: the last loader handed to
         fit/fit_sgd) is persisted in the manifest extras, so restore resumes
@@ -408,7 +438,7 @@ class DPMREngine:
                  "num_features": self.cfg.num_features}
         if loader is not None:
             extra["data"] = loader.state_dict()
-        Checkpointer(directory, keep=keep).save(
+        self._checkpointer(directory, keep).save(
             step, self.state, block=block, extra=extra)
         return step
 
@@ -426,10 +456,42 @@ class DPMREngine:
         `on_host_change="reassign"` accepts a cursor recorded under a
         different data-plane host count: shard ownership is recomputed for
         the new geometry and the stream resumes at the epoch boundary
-        (mirrors the strategy-carry reset on elastic mesh rescale)."""
+        (mirrors the strategy-carry reset on elastic mesh rescale).
+
+        If the checkpoint was written at a DIFFERENT total shard count
+        (the cold table's padded length no longer matches this engine's
+        mesh), the state is re-padded/re-sharded through
+        `runtime/elastic.py::reshard_dpmr_state` instead of being placed
+        blind — the elastic-restart path (the strategy carry resets; the
+        hot-set geometry, cfg.max_hot, must match)."""
+        ck = self._checkpointer(directory, keep=3)
         with compat.set_mesh(self.mesh):
-            self.state, manifest = Checkpointer(directory).restore(
-                self.state, step=step)
+            arrs, manifest = ck.restore_host(step)
+            leaves, treedef = jax.tree.flatten(self.state)
+            if len(arrs) != len(leaves):
+                raise ValueError(
+                    f"checkpoint has {len(arrs)} leaves, the engine state "
+                    f"{len(leaves)} — not a {manifest['extra'].get('kind')} "
+                    "checkpoint for this state structure")
+            if [tuple(s) for s in manifest["shapes"]] == \
+                    [tuple(l.shape) for l in leaves]:
+                # scalar leaves (step) may live uncommitted on one device;
+                # device_putting them under that SingleDeviceSharding would
+                # COMMIT them there and conflict with the mesh-sharded
+                # table in the next jitted step — replicate instead
+                from jax.sharding import NamedSharding, PartitionSpec
+
+                rep = NamedSharding(self.mesh, PartitionSpec())
+                self.state = jax.tree.unflatten(treedef, [
+                    jax.device_put(a, l.sharding
+                                   if isinstance(l.sharding, NamedSharding)
+                                   else rep)
+                    for a, l in zip(arrs, leaves, strict=True)])
+            else:
+                from repro.runtime.elastic import reshard_dpmr_state
+
+                self.state = reshard_dpmr_state(
+                    jax.tree.unflatten(treedef, arrs), self.cfg, self.mesh)
         saved_dist = manifest.get("extra", {}).get("distribution")
         if saved_dist is not None and saved_dist not in list_strategies():
             # a registry KeyError here would name nothing useful; the

@@ -5,20 +5,32 @@ Layout:   <dir>/step_<N>/
             arr_<i>.npy          # one file per leaf (full logical array)
 
 Guarantees:
-  - atomicity: written to `step_<N>.tmp`, fsync'd, then os.replace'd — a
-    crash mid-write never corrupts the latest checkpoint.
+  - atomicity, twice over: leaves land in `step_<N>.tmp` which is
+    os.replace'd into place only when complete, and INSIDE the directory
+    the manifest itself is written to a temp name, fsync'd, and
+    os.replace'd last — so a complete `manifest.json` is the definition
+    of a complete checkpoint. Discovery (`all_steps`) only counts step
+    directories whose manifest parses: a crash mid-write (or a truncated
+    manifest from any other writer) makes that step invisible and restore
+    falls back to the previous good one instead of crashing.
   - keep-N retention.
   - elastic restore: leaves are FULL logical arrays; `restore` device_puts
     them under whatever shardings the NEW mesh prescribes, so a run saved on
     a (16,16) mesh restarts on (8,16) or (2,16,16) unchanged (DPMR sparse
-    state needs re-padding — runtime/elastic.py).
-  - async: `save(..., block=False)` gathers to host synchronously (cheap)
-    and writes on a daemon thread; `wait()` joins before the next save.
+    state needs re-padding — runtime/elastic.py; `restore_host` hands back
+    the raw host arrays for that path).
+  - async: `save(..., block=False)` keeps only the device->host snapshot on
+    the step path (the leaves are host copies the moment save() returns, so
+    later donation/mutation of the live buffers cannot leak into the file)
+    and does serialization + fsync + the atomic renames on a daemon thread;
+    `wait()` joins before the next save or process exit.
 
-Multi-host note: this implementation writes full logical arrays from one
-process (this container is single-process). The layout is per-leaf files +
-manifest precisely so a multi-host deployment can switch to per-shard files
-(`arr_<i>.shard<k>.npy` + process-local writes) without changing readers.
+Multi-process: under real `jax.distributed` execution every process calls
+`save` (the host gather of cross-process arrays is a collective —
+`runtime/multiprocess.host_value`), but only process 0 touches the
+filesystem; the directory is expected to be shared (or only process 0's
+copy is the checkpoint of record). Restore reads full logical arrays on
+every process and device_puts them under the global shardings.
 """
 from __future__ import annotations
 
@@ -30,6 +42,8 @@ import time
 
 import jax
 import numpy as np
+
+from repro.runtime import multiprocess
 
 
 class Checkpointer:
@@ -43,14 +57,17 @@ class Checkpointer:
 
     def save(self, step: int, state, extra: dict | None = None,
              block: bool = True):
-        """Snapshot `state` (pytree of jax/np arrays) at `step`."""
+        """Snapshot `state` (pytree of jax/np arrays) at `step`.
+
+        The device->host copy happens HERE, synchronously — that is the
+        snapshot point, and the only work `block=False` leaves on the step
+        path. Everything after (np.save, manifest fsync, atomic renames,
+        GC) runs inline (`block=True`) or on a daemon thread."""
         self.wait()
         leaves, treedef = jax.tree.flatten(state)
-        host_leaves = [np.asarray(jax.device_get(l)) for l in leaves]
+        host_leaves = [multiprocess.host_value(l) for l in leaves]
         manifest = {
             "step": int(step),
-            "treedef": jax.tree.unflatten(
-                treedef, list(range(len(leaves)))) if False else None,
             "num_leaves": len(leaves),
             "paths": [str(p) for p, _ in
                       jax.tree_util.tree_flatten_with_path(state)[0]],
@@ -59,6 +76,8 @@ class Checkpointer:
             "extra": extra or {},
             "time": time.time(),
         }
+        if not multiprocess.is_primary():
+            return      # gather above was the collective part; 0 writes
 
         def _write():
             final = os.path.join(self.dir, f"step_{step:010d}")
@@ -68,10 +87,14 @@ class Checkpointer:
             os.makedirs(tmp)
             for i, arr in enumerate(host_leaves):
                 np.save(os.path.join(tmp, f"arr_{i}.npy"), arr)
-            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            # manifest last, via its own temp + replace: its presence (and
+            # parseability) is the completeness marker readers trust
+            mtmp = os.path.join(tmp, "manifest.json.tmp")
+            with open(mtmp, "w") as f:
                 json.dump(manifest, f)
                 f.flush()
                 os.fsync(f.fileno())
+            os.replace(mtmp, os.path.join(tmp, "manifest.json"))
             if os.path.exists(final):
                 shutil.rmtree(final)
             os.replace(tmp, final)
@@ -96,36 +119,62 @@ class Checkpointer:
 
     # -- restore --------------------------------------------------------------
 
+    def _manifest_path(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:010d}", "manifest.json")
+
+    def _manifest_ok(self, step: int) -> bool:
+        try:
+            with open(self._manifest_path(step)) as f:
+                json.load(f)
+            return True
+        except (OSError, ValueError):
+            return False
+
     def all_steps(self) -> list[int]:
+        """Steps with a COMPLETE checkpoint (parseable manifest). A dir
+        whose manifest is missing or truncated — a crashed writer, a
+        partial copy — is skipped, so `restore()` falls back to the
+        newest good step instead of crashing on the bad one."""
         out = []
         for name in os.listdir(self.dir):
             if name.startswith("step_") and not name.endswith(".tmp"):
                 try:
-                    out.append(int(name[5:]))
+                    step = int(name[5:])
                 except ValueError:
-                    pass
+                    continue
+                if self._manifest_ok(step):
+                    out.append(step)
         return sorted(out)
 
     def latest_step(self) -> int | None:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def restore_host(self, step: int | None = None
+                     ) -> tuple[list[np.ndarray], dict]:
+        """Raw host-side leaves + manifest, no placement — the elastic
+        path: when the saved geometry no longer matches the live state
+        (`shapes` differ), re-pad/re-shard these with
+        `runtime/elastic.py` instead of device_putting them blind."""
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        with open(self._manifest_path(step)) as f:
+            manifest = json.load(f)
+        d = os.path.join(self.dir, f"step_{step:010d}")
+        arrs = [np.load(os.path.join(d, f"arr_{i}.npy"))
+                for i in range(manifest["num_leaves"])]
+        return arrs, manifest
+
     def restore(self, like, step: int | None = None,
                 shardings=None):
         """Restore into the structure of `like` (pytree). If `shardings` is
         given (pytree of NamedSharding matching `like`), leaves are placed
         under them — this is the elastic-resharding path."""
-        step = self.latest_step() if step is None else step
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints in {self.dir}")
-        d = os.path.join(self.dir, f"step_{step:010d}")
-        with open(os.path.join(d, "manifest.json")) as f:
-            manifest = json.load(f)
+        arrs, manifest = self.restore_host(step)
         leaves, treedef = jax.tree.flatten(like)
         assert len(leaves) == manifest["num_leaves"], (
             len(leaves), manifest["num_leaves"])
-        arrs = [np.load(os.path.join(d, f"arr_{i}.npy"))
-                for i in range(len(leaves))]
         if shardings is not None:
             sh_leaves = jax.tree.leaves(shardings)
             out = [jax.device_put(a, s) for a, s in zip(arrs, sh_leaves, strict=True)]

@@ -144,6 +144,21 @@ class ShardAssignment:
                 return h
         raise ValueError(f"chunk {chunk} outside [0, {self.num_chunks})")
 
+    def global_rows(self, host: int, batch_size: int) -> range:
+        """Rows host `host`'s per-step batch occupies in the assembled
+        GLOBAL batch: `[host*B, (host+1)*B)`.
+
+        A real multi-process run (`runtime/multiprocess.py`) glues the
+        per-host batches into one `num_hosts*B`-row global array per step
+        via `make_array_from_process_local_data`, with process h's local
+        devices holding exactly these rows; the single-process parity
+        baseline (`--host-id -1`) concatenates the same streams in the
+        same host order. One definition, both execution modes."""
+        self._check_host(host)
+        if batch_size < 1:
+            raise ValueError(f"batch_size must be positive: {batch_size}")
+        return range(host * batch_size, (host + 1) * batch_size)
+
     # -- (de)serialization — JSON-native, rides in checkpoint extras --------
 
     def to_dict(self) -> dict:

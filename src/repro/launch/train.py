@@ -22,9 +22,12 @@ Examples:
 from __future__ import annotations
 
 import argparse
+import hashlib
+import json
 import logging
 
 import jax
+import numpy as np
 
 from repro import compat
 from repro.ckpt.checkpointer import Checkpointer
@@ -60,14 +63,32 @@ def sparse_loop(args) -> dict:
     strategy by name (--strategy), resumable via engine save()/restore()
     (state incl. the strategy carry + the loader cursor).
 
-    --hosts/--host-id simulate one host of a multi-process data plane in
-    a single process: the loader serves ONLY this host's shard (its owned
-    chunk range for file corpora, its batch stride otherwise). A real
-    multi-host deployment runs one such process per host."""
+    Three execution modes over one loop (docs/DISTRIBUTED.md):
+      * --hosts H --host-id h: single-process EMULATION of host h — the
+        loader serves only that host's shard (its owned chunk range for
+        file corpora, its batch stride otherwise);
+      * --hosts H --host-id -1: all-hosts emulation — one process serves
+        the concatenated H*B-row global batch every step, the parity
+        baseline a real H-process run must bit-match;
+      * --coordinator/--num-processes/--process-id (one invocation per
+        process): REAL `jax.distributed` execution — process h is host h,
+        its loader materializes only host h's batches, and the placement
+        seam assembles them into global arrays
+        (`runtime/multiprocess.global_batch_placement`)."""
     from repro.api import DPMREngine, ShardedLoader, get_source, get_strategy
     from repro.ckpt.checkpointer import Checkpointer as Ck
     from repro.configs.base import DPMRConfig
+    from repro.runtime import multiprocess as mp
 
+    ctx = mp.context()
+    hosts, host_id = args.hosts, args.host_id
+    if ctx.is_distributed:
+        if hosts not in (1, ctx.num_processes) or host_id == -1:
+            raise SystemExit(
+                "real multi-process runs derive the data plane from the "
+                "process topology: drop --hosts/--host-id (process h IS "
+                "host h of --num-processes)")
+        hosts, host_id = ctx.num_processes, ctx.process_id
     get_strategy(args.strategy)          # fail fast on unknown names
     mesh = make_host_mesh(args.mesh_data, args.mesh_model)
     cfg = DPMRConfig(num_features=args.features,
@@ -81,14 +102,21 @@ def sparse_loop(args) -> dict:
                             num_batches=args.sparse_batches,
                             num_features=args.features,
                             features_per_sample=32, seed=args.data_seed)
+    eval_source = source         # deterministic final eval reads raw batches
+    if host_id == -1:
+        # parity baseline: one process, every host's stream, concatenated
+        source = mp.emulate_all_hosts(source, hosts)
+        hosts, host_id = 1, 0
     loader = ShardedLoader(
-        source, mesh, host_index=args.host_id, num_hosts=args.hosts,
-        prefetch=args.prefetch, shuffle=args.shuffle)
-    if loader.assignment is not None:
+        source, mesh, host_index=host_id, num_hosts=hosts,
+        prefetch=args.prefetch, shuffle=args.shuffle,
+        placement=mp.global_batch_placement(mesh) if ctx.is_distributed
+        else "sharded")
+    if loader.assignment is not None and loader.assignment.kind == "chunk":
         log.info("chunk ownership: host %d/%d owns chunks [%d, %d) of %d",
-                 args.host_id, args.hosts,
-                 loader.assignment.owned_chunks(args.host_id).start,
-                 loader.assignment.owned_chunks(args.host_id).stop,
+                 host_id, hosts,
+                 loader.assignment.owned_chunks(host_id).start,
+                 loader.assignment.owned_chunks(host_id).stop,
                  loader.assignment.num_chunks)
     engine = DPMREngine(cfg, mesh)
     if args.ckpt and Ck(args.ckpt).latest_step() is not None:
@@ -98,13 +126,18 @@ def sparse_loop(args) -> dict:
         log.info("resumed sparse run at step %d (strategy %s)",
                  int(engine.state.step), args.strategy)
     # checkpoint every --save-every steps (like the dense loop), so a
-    # killed run resumes mid-stream instead of restarting from step 0
+    # killed run resumes mid-stream instead of restarting from step 0.
+    # --async-ckpt keeps only the device->host snapshot on the step path;
+    # the final save is always blocking (flushes any in-flight write)
     history = []
     while int(engine.state.step) < args.steps:
         chunk = min(args.save_every, args.steps - int(engine.state.step))
         history += engine.fit_sgd(loader, steps=chunk)
         if args.ckpt:
-            engine.save(args.ckpt, keep=args.keep)
+            engine.save(args.ckpt, keep=args.keep,
+                        block=not args.async_ckpt)
+    if args.ckpt and args.async_ckpt:
+        engine.save(args.ckpt, keep=args.keep)      # blocking flush
     try:
         # the most recently used compilation — the CONFORMED global batch
         # size fit_sgd actually trained on (the raw source batch size may
@@ -117,10 +150,28 @@ def sparse_loop(args) -> dict:
         bs = int(getattr(loader.source, "batch_size", 0)) or args.batch
         fns = engine.step_fns(bs - bs % loader.batch_divisor or bs)
     wire = get_strategy(args.strategy).bytes_per_device(fns.ctx)
+    # deterministic parity probe: the pmean loss METRIC can wobble ~1 ulp
+    # across process boundaries (reduction order), so cross-mode parity is
+    # asserted on the final parameters (digest) and on a loss recomputed
+    # host-side in float64 over a fixed raw batch — bit-identical exactly
+    # when the parameters are (scripts/check_multiprocess.py)
+    eval_batch = eval_source.batch(0)
+    probs = np.asarray(engine.predict({"ids": eval_batch["ids"],
+                                       "vals": eval_batch["vals"]}),
+                       np.float64)
+    y = np.asarray(eval_batch["labels"], np.float64)
+    eps = 1e-9
+    final_eval = float(-np.mean(y * np.log(probs + eps)
+                                + (1 - y) * np.log(1 - probs + eps)))
+    digest = hashlib.md5(
+        mp.host_value(engine.state.cold).tobytes()).hexdigest()
     return {"history": history, "last_step": int(engine.state.step),
             "strategy": args.strategy,
             "wire_bytes": {"inner": wire.inner, "outer": wire.outer},
-            "losses": [h["loss"] for h in history]}
+            "losses": [h["loss"] for h in history],
+            "final_eval_loss": final_eval, "cold_md5": digest,
+            "num_processes": ctx.num_processes,
+            "process_id": ctx.process_id, "hosts": hosts}
 
 
 def train_loop(args, fail_injector=None) -> dict:
@@ -208,7 +259,29 @@ def build_parser():
                     help="simulate a data plane divided over this many "
                          "hosts (this process serves one of them)")
     ap.add_argument("--host-id", type=int, default=0,
-                    help="which host of --hosts this process simulates")
+                    help="which host of --hosts this process simulates; "
+                         "-1 emulates ALL hosts in one process (the "
+                         "concatenated global batch — the parity baseline "
+                         "for a real --num-processes run)")
+    ap.add_argument("--coordinator", default="",
+                    help="jax.distributed coordinator address host:port "
+                         "(process 0 serves it); required with "
+                         "--num-processes > 1")
+    ap.add_argument("--num-processes", type=int, default=1,
+                    help="total processes in a REAL multi-process run "
+                         "(one launch/train.py invocation per process; "
+                         "sparse face only — see docs/DISTRIBUTED.md)")
+    ap.add_argument("--process-id", type=int, default=0,
+                    help="this process's rank in [0, --num-processes)")
+    ap.add_argument("--local-devices", type=int, default=0,
+                    help="force this process's emulated CPU device count "
+                         "(XLA_FLAGS host-platform trick; 0 = leave the "
+                         "environment alone). Global mesh devices = "
+                         "--local-devices x --num-processes")
+    ap.add_argument("--json", action="store_true",
+                    help="print the run summary as one JSON line (losses, "
+                         "final_eval_loss, cold_md5) — what the parity "
+                         "checkers consume")
     ap.add_argument("--shuffle", action="store_true",
                     help="per-epoch loader shuffling (seeded, resume-exact)")
     ap.add_argument("--smoke", action="store_true",
@@ -240,6 +313,15 @@ def build_parser():
 def main():
     logging.basicConfig(level=logging.INFO)
     args = build_parser().parse_args()
+    if args.num_processes > 1 or args.local_devices:
+        # must run before the first jax computation (backend init reads
+        # XLA_FLAGS once; jax.distributed must precede any collective)
+        from repro.runtime import multiprocess
+
+        multiprocess.initialize(
+            coordinator=args.coordinator,
+            num_processes=args.num_processes, process_id=args.process_id,
+            local_device_count=args.local_devices or None)
     if args.sparse:
         out = sparse_loop(args)
         wb = out["wire_bytes"]
@@ -247,7 +329,13 @@ def main():
               f"{out['losses'][-1] if out['losses'] else float('nan'):.4f} "
               f"after {out['last_step']} steps; wire bytes/device/step "
               f"inner={wb['inner']} outer={wb['outer']}")
+        if args.json:
+            out.pop("history", None)
+            print(json.dumps(out))
         return
+    if args.num_processes > 1:
+        raise SystemExit("--num-processes applies to the sparse face "
+                         "(--sparse); the dense driver is single-process")
     if not args.arch:
         raise SystemExit("--arch is required (or pass --sparse)")
     out = train_loop(args)

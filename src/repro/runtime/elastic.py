@@ -19,6 +19,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import DPMRConfig
 from repro.core import dpmr
 from repro.data.ownership import reassign_state
+from repro.runtime.multiprocess import host_value
 
 
 def reshard_tree(tree, shardings):
@@ -35,7 +36,7 @@ def reshard_dpmr_state(state: dpmr.DPMRState, cfg: DPMRConfig, new_mesh
     rep = NamedSharding(new_mesh, P())
 
     def repad(x):
-        x = jax.device_get(x)
+        x = host_value(x)     # collective gather under real multi-process
         if x.shape[0] < f_new:
             x = jnp.pad(x, (0, f_new - x.shape[0]))
         elif x.shape[0] > f_new:
@@ -57,11 +58,11 @@ def reshard_dpmr_state(state: dpmr.DPMRState, cfg: DPMRConfig, new_mesh
                       jnp.float32)
     return dpmr.DPMRState(
         cold=jax.device_put(repad(state.cold), shard),
-        hot=jax.device_put(jax.device_get(state.hot), rep),
-        hot_ids=jax.device_put(jax.device_get(state.hot_ids), rep),
+        hot=jax.device_put(host_value(state.hot), rep),
+        hot_ids=jax.device_put(host_value(state.hot_ids), rep),
         cold_acc=jax.device_put(repad(state.cold_acc), shard),
-        hot_acc=jax.device_put(jax.device_get(state.hot_acc), rep),
-        step=jax.device_put(jax.device_get(state.step), rep),
+        hot_acc=jax.device_put(host_value(state.hot_acc), rep),
+        step=jax.device_put(host_value(state.step), rep),
         strat=jax.device_put(strat, shard),
     )
 

@@ -55,6 +55,79 @@ def test_restore_missing_raises(tmp_path):
         ck.restore(_state())
 
 
+def test_truncated_manifest_falls_back_to_previous(tmp_path):
+    """The crash-consistency contract: a checkpoint whose manifest was cut
+    off mid-write (simulated partial write/crash) is INVISIBLE — discovery
+    skips it and restore hands back the newest complete step instead of
+    crashing on the bad one."""
+    ck = Checkpointer(str(tmp_path), keep=5)
+    ck.save(1, _state(1.0))
+    ck.save(2, _state(2.0))
+    manifest = tmp_path / "step_0000000002" / "manifest.json"
+    raw = manifest.read_bytes()
+    manifest.write_bytes(raw[: len(raw) // 2])       # truncate mid-write
+    assert ck.all_steps() == [1]
+    assert ck.latest_step() == 1
+    restored, man = ck.restore(_state(0.0))
+    assert man["step"] == 1
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(_state(1.0)["a"]))
+    # a missing manifest (killed before the in-dir rename) hides the same way
+    manifest.unlink()
+    assert ck.all_steps() == [1]
+
+
+def test_async_save_bit_exact_vs_sync(tmp_path):
+    """`block=False` must produce byte-identical array files and an
+    equivalent manifest to the synchronous path at the same step."""
+    s = _state(7.25)
+    sync, asyn = Checkpointer(str(tmp_path / "s")), \
+        Checkpointer(str(tmp_path / "a"))
+    sync.save(3, s, extra={"k": 1}, block=True)
+    asyn.save(3, s, extra={"k": 1}, block=False)
+    asyn.wait()
+    d_s, d_a = (tmp_path / m / "step_0000000003" for m in ("s", "a"))
+    names = sorted(p.name for p in d_s.iterdir())
+    assert names == sorted(p.name for p in d_a.iterdir())
+    for name in names:
+        if name == "manifest.json":
+            import json
+
+            ms = json.loads((d_s / name).read_text())
+            ma = json.loads((d_a / name).read_text())
+            ms.pop("time"), ma.pop("time")
+            assert ms == ma
+        else:
+            assert (d_s / name).read_bytes() == (d_a / name).read_bytes()
+
+
+def test_async_snapshot_isolation_under_donation(tmp_path):
+    """An async save captures the PRE-step state even though the training
+    loop immediately keeps going and the jitted step DONATES (mutates in
+    place) the very buffers that were live at save time — the device->host
+    snapshot happens inside save(), before it returns."""
+    from repro.api import DPMREngine
+    from repro.configs.base import DPMRConfig
+    from repro.data import get_source
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh(1, 1)
+    cfg = DPMRConfig(num_features=1 << 10, max_features_per_sample=8)
+    src = get_source("zipf_sparse", batch_size=32, num_batches=16,
+                     num_features=1 << 10, features_per_sample=8, seed=0)
+    eng = DPMREngine(cfg, mesh)
+    eng.fit_sgd(src, steps=2)
+    snap = np.asarray(eng.state.cold).copy()
+    step_saved = eng.save(str(tmp_path), block=False)
+    eng.fit_sgd(src, steps=3)               # donates/overwrites live state
+    eng.wait_saves()
+    fresh = DPMREngine(cfg, make_host_mesh(1, 1))
+    manifest = fresh.restore(str(tmp_path))
+    assert manifest["step"] == step_saved == 2
+    np.testing.assert_array_equal(np.asarray(fresh.state.cold), snap)
+    assert not np.array_equal(np.asarray(eng.state.cold), snap)
+
+
 def _args(tmp, steps, save_every=5):
     return build_parser().parse_args([
         "--arch", "yi-6b", "--smoke", "--steps", str(steps), "--batch", "4",
